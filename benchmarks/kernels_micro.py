@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: interpret-mode allclose + wall time per call.
+
+Interpret-mode wall time on CPU is NOT TPU performance -- the derived column
+carries the correctness deltas and the work size; TPU perf is modeled in the
+roofline report (results/dryrun).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit, timed
+
+
+def kernels_micro():
+    key = jax.random.PRNGKey(0)
+
+    # lamp_flash_attention
+    B, H, T, D = 1, 4, 256, 64
+    q = jax.random.normal(key, (B, H, T, D)) * 1.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, T, D)) * 1.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, T, D))
+    kw = dict(mu=7, tau=0.05, causal=True, block_q=64, block_k=64, k_subtile=32)
+    us, (out, nsel) = timed(
+        lambda: ops.lamp_flash_attention(q, k, v, interpret=True, **kw))
+    want, nref = ref.lamp_flash_attention_ref(q, k, v, **kw)
+    err = float(jnp.max(jnp.abs(out - want)))
+    emit("kernel_lamp_attention_256", us,
+         f"max_err={err:.2e};nsel={int(nsel)};nsel_ref={int(nref)};"
+         f"flops={4 * B * H * T * T * D}")
+
+    # flash_decode
+    S = 2048
+    qd = jax.random.normal(key, (2, 4, 1, 64)) * 1.5
+    kc = jax.random.normal(jax.random.PRNGKey(3), (2, 4, S, 64)) * 1.5
+    vc = jax.random.normal(jax.random.PRNGKey(4), (2, 4, S, 64))
+    length = jnp.array([S, S - 100])
+    us, (out, nsel) = timed(
+        lambda: ops.flash_decode(qd, kc, vc, length, mu=7, tau=0.05,
+                                 block_k=256, k_subtile=32, interpret=True))
+    want, nref = ref.flash_decode_ref(qd, kc, vc, length, mu=7, tau=0.05,
+                                      block_k=256, k_subtile=32)
+    emit("kernel_flash_decode_2k", us,
+         f"max_err={float(jnp.max(jnp.abs(out - want))):.2e};"
+         f"nsel={int(nsel)};nsel_ref={int(nref)}")
+
+    # ps_matmul
+    a = jax.random.normal(key, (256, 256))
+    b = jax.random.normal(jax.random.PRNGKey(5), (256, 256))
+    us, out = timed(lambda: ops.ps_matmul(a, b, mu=7, interpret=True))
+    want = ref.ps_matmul_ref(a, b, 7, 128)
+    emit("kernel_ps_matmul_256", us,
+         f"max_err={float(jnp.max(jnp.abs(out - want))):.2e};"
+         f"flops={2 * 256 ** 3}")
+
+    # rmsnorm
+    x = jax.random.normal(key, (1024, 512)).astype(jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(6), (512,)) * 0.1
+    us, out = timed(lambda: ops.rmsnorm(x, w, interpret=True))
+    want = ref.rmsnorm_ref(x, w)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    emit("kernel_rmsnorm_1024x512", us, f"max_err={err:.2e}")

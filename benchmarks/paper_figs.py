@@ -1,0 +1,233 @@
+"""Paper figure/table reproductions (one function per figure).
+
+Each emits CSV rows `name,us_per_call,derived` where `derived` packs the
+figure's metrics. Qualitative claims validated per figure are listed in
+EXPERIMENTS.md with the measured numbers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.policy import LampPolicy
+
+from .common import (LARGE, SMALL, build_model, emit, eval_policy,
+                     make_batches, timed)
+
+
+def _policy(mu, tau, rule="strict", granularity=1):
+    return LampPolicy.paper_default(mu=mu, tau=tau, rule=rule,
+                                    granularity=granularity)
+
+
+_UNIFORM_TAU = 1e9  # strict rule with huge tau selects nothing == uniform low
+
+
+def fig1_kl_vs_mu():
+    """Fig 1: KL vs mu at tau=0.1 -- uniform / LAMP / random-control."""
+    cfg, params = build_model(SMALL)
+    batches = make_batches(cfg)
+    for mu in (3, 4, 5, 7, 10):
+        r_uni = eval_policy(cfg, params, batches, _policy(mu, _UNIFORM_TAU))
+        us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                          _policy(mu, 0.1)))
+        r_lamp = eval_policy(cfg, params, batches, _policy(mu, 0.1))
+        r_rand = eval_policy(cfg, params, batches, _policy(mu, 0.1, "random"))
+        emit(f"fig1_mu{mu}", us,
+             f"kl_uniform={r_uni['kl']:.3e};kl_lamp={r_lamp['kl']:.3e};"
+             f"kl_random={r_rand['kl']:.3e};rate={r_lamp['recompute_rate']:.4f}")
+
+
+def fig2_tau_sweep():
+    """Fig 2: tau sweep per mu -- KL, flip rate, recompute rate."""
+    cfg, params = build_model(SMALL)
+    batches = make_batches(cfg)
+    for mu in (3, 4, 6):
+        for tau in (0.4, 0.2, 0.1, 0.05, 0.02):
+            us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                              _policy(mu, tau)))
+            r = eval_policy(cfg, params, batches, _policy(mu, tau))
+            emit(f"fig2_mu{mu}_tau{tau}", us,
+                 f"kl={r['kl']:.3e};flip={r['flip_rate']:.4f};"
+                 f"rate={r['recompute_rate']:.4f}")
+
+
+def fig3_strict_vs_relaxed():
+    """Fig 3: Pareto boundaries of strict (8) vs relaxed (9) at mu=4."""
+    cfg, params = build_model(SMALL)
+    batches = make_batches(cfg)
+    for rule, taus in (("strict", (0.4, 0.1, 0.02, 0.005)),
+                       ("relaxed", (0.8, 0.4, 0.1, 0.02))):
+        for tau in taus:
+            us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                              _policy(4, tau, rule)))
+            r = eval_policy(cfg, params, batches, _policy(4, tau, rule))
+            emit(f"fig3_{rule}_tau{tau}", us,
+                 f"kl={r['kl']:.3e};flip={r['flip_rate']:.4f};"
+                 f"rate={r['recompute_rate']:.4f}")
+
+
+def fig4_datasets():
+    """Fig 4 (C.1): input-agnosticism across dataset structures."""
+    cfg, params = build_model(SMALL)
+    for name, kw in (("markov8", dict(kind="markov", branching=8)),
+                     ("markov2", dict(kind="markov", branching=2)),
+                     ("uniform", dict(kind="uniform"))):
+        batches = make_batches(cfg, **kw)
+        us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                          _policy(4, 0.1)))
+        r = eval_policy(cfg, params, batches, _policy(4, 0.1))
+        emit(f"fig4_{name}", us,
+             f"kl={r['kl']:.3e};rate={r['recompute_rate']:.4f}")
+
+
+def fig5_model_scale():
+    """Fig 5 (C.2): larger model benefits at least as much."""
+    batches_ref = None
+    for name, scale in (("small", SMALL), ("large", LARGE)):
+        cfg, params = build_model(scale)
+        batches = make_batches(cfg)
+        r_uni = eval_policy(cfg, params, batches, _policy(4, _UNIFORM_TAU))
+        us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                          _policy(4, 0.1)))
+        r = eval_policy(cfg, params, batches, _policy(4, 0.1))
+        emit(f"fig5_{name}", us,
+             f"kl_uniform={r_uni['kl']:.3e};kl_lamp={r['kl']:.3e};"
+             f"gain={r_uni['kl'] / max(r['kl'], 1e-12):.1f}x;"
+             f"rate={r['recompute_rate']:.4f}")
+
+
+def fig6_permuted():
+    """Fig 6 (C.3): token-order permutation does not break LAMP."""
+    cfg, params = build_model(SMALL)
+    for name, permute in (("direct", False), ("permuted", True)):
+        batches = make_batches(cfg, permute=permute)
+        us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                          _policy(4, 0.1)))
+        r = eval_policy(cfg, params, batches, _policy(4, 0.1))
+        emit(f"fig6_{name}", us,
+             f"kl={r['kl']:.3e};flip={r['flip_rate']:.4f};"
+             f"rate={r['recompute_rate']:.4f}")
+
+
+def fig7_random_control():
+    """Fig 7 (C.4): Pareto of LAMP vs random recompute across tau."""
+    cfg, params = build_model(SMALL)
+    batches = make_batches(cfg)
+    for tau in (0.4, 0.1, 0.02):
+        r_lamp = eval_policy(cfg, params, batches, _policy(4, tau))
+        us, _ = timed(lambda: eval_policy(cfg, params, batches[:1],
+                                          _policy(4, tau, "random")))
+        r_rand = eval_policy(cfg, params, batches, _policy(4, tau, "random"))
+        emit(f"fig7_tau{tau}", us,
+             f"kl_lamp={r_lamp['kl']:.3e};kl_random={r_rand['kl']:.3e};"
+             f"rate={r_lamp['recompute_rate']:.4f}")
+
+
+def table1_perplexity():
+    """Table 1 (C.5): perplexity -- full / low / relaxed / relaxed-LN."""
+    cfg, params = build_model(SMALL)
+    for ds_name, kw in (("markov8", dict(kind="markov", branching=8)),
+                        ("markov2", dict(kind="markov", branching=2)),
+                        ("uniform", dict(kind="uniform"))):
+        batches = make_batches(cfg, **kw)
+        rows = [("full", None),
+                ("low", _policy(4, _UNIFORM_TAU)),
+                ("relaxed_t03", _policy(4, 0.03, "relaxed")),
+                ("relaxed_ln_t03", _policy(4, 0.03, "relaxed_ln")),
+                ("relaxed_t09", _policy(4, 0.09, "relaxed")),
+                ("relaxed_ln_t09", _policy(4, 0.09, "relaxed_ln"))]
+        for mname, pol in rows:
+            us, _ = timed(lambda: eval_policy(cfg, params, batches[:1], pol),
+                          warmup=1, iters=1)
+            r = eval_policy(cfg, params, batches, pol)
+            emit(f"table1_{ds_name}_{mname}", us,
+                 f"ppl={r['perplexity']:.4f};rate={r['recompute_rate']:.4f}")
+
+
+ALL = [fig1_kl_vs_mu, fig2_tau_sweep, fig3_strict_vs_relaxed, fig4_datasets,
+       fig5_model_scale, fig6_permuted, fig7_random_control, table1_perplexity]
+
+
+def rwkv_logits_site():
+    """Beyond-paper: LAMP at the LM-head -> sampling-softmax site for the
+    attention-free rwkv6 (DESIGN.md Sec 6 -- the arch has no KQ softmax).
+    Rule (8) on final logits protects the sampling distribution under
+    low-precision logit computation."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.models import api
+    from repro.runtime.serve_loop import lamp_logits_softmax
+    from repro.core.numerics import round_to_mantissa
+
+    cfg = reduced(get_config("rwkv6-7b"), d_model=128, vocab=2048)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+    logits = api.forward_logits(cfg, params, {"tokens": toks}) * 4.0
+    p_ref = jax.nn.softmax(logits, -1)
+    for mu in (4, 6):
+        p_low = jax.nn.softmax(round_to_mantissa(logits, mu), -1)
+        us, (p_lamp, rate) = timed(
+            lambda: lamp_logits_softmax(logits, mu, 0.05))
+        kl_low = float(jnp.mean(jnp.sum(
+            p_ref * (jnp.log(p_ref + 1e-20) - jnp.log(p_low + 1e-20)), -1)))
+        kl_lamp = float(jnp.mean(jnp.sum(
+            p_ref * (jnp.log(p_ref + 1e-20) - jnp.log(p_lamp + 1e-20)), -1)))
+        emit(f"rwkv_logits_site_mu{mu}", us,
+             f"kl_low={kl_low:.3e};kl_lamp={kl_lamp:.3e};"
+             f"rate={float(rate):.4f}")
+
+
+ALL.append(rwkv_logits_site)
+
+
+def rmsnorm_site():
+    """Paper Sec 3.2 (Props 3.1/3.2): LAMP for the matmul -> RMSNorm
+    composition. Greedy prefix selection on the largest y_i^2 vs uniform low
+    precision vs random selection of the same size, across tau."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.lamp import select_rmsnorm
+    from repro.core.mixed_matmul import dot_ps
+
+    def rms(y):
+        return (len(y) ** 0.5) * y / jnp.maximum(jnp.linalg.norm(y), 1e-30)
+
+    key = jax.random.PRNGKey(0)
+    n, kdim, mu = 256, 128, 4
+    A = jax.random.normal(key, (n, kdim)) * jnp.exp(
+        jax.random.normal(jax.random.PRNGKey(1), (n, 1)))  # heavy-tailed rows
+    xv = jax.random.normal(jax.random.PRNGKey(2), (kdim,))
+    y_exact = A @ xv
+    z_ref = rms(y_exact)
+    y_low = dot_ps(A[None], xv[None, :, None], mu, granularity=1)[0, :, 0]
+
+    # The composition-amplified quantity the greedy rule controls is the
+    # normalization factor ||y|| (errors there multiply EVERY output);
+    # each component's own c_g*u rounding is outside LAMP's scope (Sec 2.2).
+    norm_ref = float(jnp.linalg.norm(y_exact))
+
+    def norm_err(y):
+        return abs(float(jnp.linalg.norm(y)) - norm_ref) / norm_ref
+
+    err_low = norm_err(y_low)
+    # kappa_c for RMSNorm lies in (1, 2]: 2 - sum_in/||y||^2 with tiny
+    # y_min (Prop 3.1), so the meaningful threshold range is tau in (1, 2)
+    for tau in (1.9, 1.5, 1.2, 1.05):
+        us, mask = timed(lambda: select_rmsnorm(y_low, tau))
+        y_ad = jnp.where(mask, y_exact, y_low)
+        err = norm_err(y_ad)
+        # random control of the same size
+        rmask = jnp.zeros(n, bool).at[jax.random.permutation(
+            jax.random.PRNGKey(3), n)[: int(mask.sum())]].set(True)
+        y_rd = jnp.where(rmask, y_exact, y_low)
+        err_rand = norm_err(y_rd)
+        emit(f"rmsnorm_site_tau{tau}", us,
+             f"err_low={err_low:.3e};err_lamp={err:.3e};"
+             f"err_random={err_rand:.3e};rate={float(mask.mean()):.4f}")
+
+
+ALL.append(rmsnorm_site)

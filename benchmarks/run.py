@@ -1,0 +1,51 @@
+"""Benchmark harness entrypoint: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,fig7,...]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1..fig7,table1,kernels,roofline")
+    args = ap.parse_args()
+
+    from . import paper_figs
+    from .kernels_micro import kernels_micro
+    from .roofline_report import roofline_report
+
+    jobs = {
+        "fig1": paper_figs.fig1_kl_vs_mu,
+        "fig2": paper_figs.fig2_tau_sweep,
+        "fig3": paper_figs.fig3_strict_vs_relaxed,
+        "fig4": paper_figs.fig4_datasets,
+        "fig5": paper_figs.fig5_model_scale,
+        "fig6": paper_figs.fig6_permuted,
+        "fig7": paper_figs.fig7_random_control,
+        "table1": paper_figs.table1_perplexity,
+        "rwkv_logits": paper_figs.rwkv_logits_site,
+        "rmsnorm_site": paper_figs.rmsnorm_site,
+        "kernels": kernels_micro,
+        "roofline": roofline_report,
+    }
+    selected = args.only.split(",") if args.only else list(jobs)
+    print("name,us_per_call,derived")
+    failed = 0
+    for key in selected:
+        try:
+            jobs[key]()
+        except Exception:
+            failed += 1
+            print(f"{key},0.0,ERROR", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

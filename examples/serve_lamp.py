@@ -1,0 +1,54 @@
+"""End-to-end serving driver: batched requests against a small model with
+LAMP inference enabled (the paper's deployment scenario).
+
+Prefills a batch of prompts, decodes new tokens with the relaxed-LAMP
+attention path + router-LAMP (for MoE), and reports throughput and the
+LAMP recompute rate. Runs on any arch:
+
+    PYTHONPATH=src python examples/serve_lamp.py [arch]
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models import api
+from repro.runtime.serve_loop import ServeConfig, generate
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-moe-30b-a3b"
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+
+    batch_size, prompt_len, new_tokens = 4, 32, 24
+    batch = {"tokens": jax.random.randint(key, (batch_size, prompt_len),
+                                          0, cfg.vocab)}
+    if cfg.family == "whisper":
+        batch["frames"] = jax.random.normal(
+            key, (batch_size, cfg.enc_seq, cfg.d_model)) * 0.1
+    if cfg.family == "llava":
+        batch["image_embeds"] = jax.random.normal(
+            key, (batch_size, cfg.n_patches, cfg.d_model)) * 0.1
+
+    cache_len = prompt_len + new_tokens + cfg.n_patches + cfg.n_meta_tokens + 8
+    for use_lamp in (False, True):
+        serve = ServeConfig(max_new_tokens=new_tokens, temperature=0.7,
+                            use_lamp=use_lamp, cache_len=cache_len, seed=7)
+        out = generate(cfg, params, batch, serve)
+        tag = "LAMP" if use_lamp else "FP32"
+        print(f"[{tag}] prefill {out['prefill_s']*1e3:6.0f}ms  "
+              f"decode {out['decode_tok_per_s']:6.1f} tok/s  "
+              f"first-seq tokens: {out['tokens'][0][:8].tolist()}")
+    print("\n(LAMP serving: KQ products in PS(mu) with rule-(9) selective "
+          "FP32 recompute; MoE router logits under rule (8).)")
+
+
+if __name__ == "__main__":
+    main()

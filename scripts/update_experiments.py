@@ -1,0 +1,69 @@
+"""Regenerate the §Dry-run and §Roofline tables in EXPERIMENTS.md from
+results/dryrun/*.json. Keeps hand-written sections intact via markers.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from benchmarks.roofline_report import load_cells, markdown_table  # noqa: E402
+
+BEGIN = "<!-- AUTOGEN:{} BEGIN -->"
+END = "<!-- AUTOGEN:{} END -->"
+
+
+def splice(text: str, tag: str, payload: str) -> str:
+    b, e = BEGIN.format(tag), END.format(tag)
+    pat = re.compile(re.escape(b) + r".*?" + re.escape(e), re.S)
+    block = f"{b}\n{payload}\n{e}"
+    if pat.search(text):
+        return pat.sub(lambda _: block, text)
+    return text + "\n" + block + "\n"
+
+
+def dryrun_summary(cells) -> str:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+    lines = [
+        f"- cells compiled OK: **{len(ok)}** "
+        f"(single-pod 16x16=256 chips and multi-pod 2x16x16=512 chips)",
+        f"- cells skipped by assignment: **{len(skipped)}** "
+        f"(full-attention archs at 500k ctx; see DESIGN.md Sec 6)",
+        f"- cells failed: **{len(err)}**",
+        "",
+        "| arch | shape | mesh | compile s | HBM GB/dev (args+tmp) | "
+        "collectives present |",
+        "|---|---|---|---|---|---|",
+    ]
+    for c in ok:
+        mem = c["memory"].get("peak_bytes_est", 0) / 1e9
+        colls = ",".join(k for k, v in c.get("collectives", {}).items() if v)
+        lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                     f"{c['compile_s']} | {mem:.2f} | {colls or '-'} |")
+    for c in skipped:
+        lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | skipped | "
+                     f"-- | -- |")
+    return "\n".join(lines)
+
+
+def main():
+    cells = load_cells()
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text() if exp.exists() else "# EXPERIMENTS\n"
+    text = splice(text, "dryrun", dryrun_summary(cells))
+    single = [c for c in cells if c["mesh"] == "single"]
+    text = splice(text, "roofline", markdown_table(single))
+    exp.write_text(text)
+    print(f"updated {exp} with {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

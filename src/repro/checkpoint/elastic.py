@@ -1,0 +1,54 @@
+"""Elastic rescaling: resume a checkpoint on a different-size mesh.
+
+The checkpoint stores full (unsharded) arrays; rescaling is therefore a
+re-placement problem, not a data-transformation problem:
+
+  1. build the new mesh from the surviving host set,
+  2. recompute PartitionSpecs against the new mesh (sharding rules degrade
+     gracefully: axes that no longer divide fall back to replication --
+     see distributed/sharding._fit_spec),
+  3. restore() with the new shardings.
+
+The only state that is *not* mesh-independent is the data-pipeline cursor;
+the synthetic pipeline is stateless in (seed, step), so resume is exact.
+Batch divisibility is re-validated here.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed import sharding as SH
+
+
+def make_shrunk_mesh(n_devices: int, *, model_axis: int):
+    """Largest (data, model) mesh that fits n_devices with the given TP."""
+    if n_devices % model_axis:
+        raise ValueError(f"{n_devices} devices not divisible by TP={model_axis}")
+    data = n_devices // model_axis
+    return jax.make_mesh(
+        (data, model_axis), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def elastic_restore(mgr: CheckpointManager, params_shape, opt_shape,
+                    mesh, *, step: Optional[int] = None):
+    """Restore the {params, opt} checkpoint tree onto `mesh` (any size)."""
+    pspecs = SH.param_specs(params_shape, mesh)
+    ospecs = SH.opt_specs(opt_shape, pspecs)
+    tree_like = {"params": params_shape, "opt": opt_shape}
+    shardings = {"params": pspecs, "opt": ospecs}
+    restored = mgr.restore(tree_like, step, shardings=shardings)
+    return restored["params"], restored["opt"], pspecs, ospecs
+
+
+def validate_batch(global_batch: int, mesh) -> Tuple[bool, str]:
+    shards = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if global_batch % shards:
+        return False, (f"global_batch={global_batch} not divisible by "
+                       f"{shards} data shards; nearest valid: "
+                       f"{global_batch - global_batch % shards}")
+    return True, ""

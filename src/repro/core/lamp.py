@@ -1,0 +1,226 @@
+"""LAMP selection rules and exact condition-number formulas.
+
+Implements the paper's closed-form solutions of the LAMP problem (5) for the
+elementary transformer nonlinearities:
+
+  * softmax, l1-normwise objective  -> threshold rule (8)            [Prop 3.3]
+  * softmax, relaxed relative rule  -> rule (9), FlashAttention-safe [Sec 4.4]
+  * softmax, length-normalized (9)  -> tau * sqrt(n_ref / n)         [App C.5]
+  * RMS layer norm, componentwise   -> greedy prefix of largest y_i^2 [Prop 3.2]
+  * entrywise activations           -> diagonal threshold             [Sec 3.1]
+
+and the exact kappa evaluators used by the property tests:
+
+  * kappa_c for RMSNorm  (Prop 3.1)
+  * kappa_1 for softmax  (Prop 3.3)
+  * kappa_c for softmax  (App B explicit formula)
+
+Conventions: selections operate on the last axis; `where` masks (e.g. the
+causal mask) restrict both the softmax domain and the selectable set. All
+rules return boolean masks `q` (True = recompute in high precision).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = float("-inf")
+
+
+def _masked(y: jnp.ndarray, where: Optional[jnp.ndarray], fill: float) -> jnp.ndarray:
+    if where is None:
+        return y
+    return jnp.where(where, y, fill)
+
+
+def masked_softmax(y: jnp.ndarray, where: Optional[jnp.ndarray] = None,
+                   axis: int = -1) -> jnp.ndarray:
+    """Numerically-stable softmax restricted to `where` (else prob 0)."""
+    y = _masked(y, where, _NEG_INF)
+    m = jnp.max(y, axis=axis, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # all-masked rows
+    e = jnp.exp(y - m)
+    if where is not None:
+        e = jnp.where(where, e, 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return e / jnp.maximum(s, jnp.finfo(y.dtype).tiny)
+
+
+# ---------------------------------------------------------------------------
+# Softmax rules
+# ---------------------------------------------------------------------------
+
+def select_softmax_strict(y: jnp.ndarray, tau: float,
+                          where: Optional[jnp.ndarray] = None,
+                          z: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Paper rule (8): q_j = 1  iff  2 z_j (1 - z_j) |y_j| > tau.
+
+    This is the optimal solution of the l1-normwise LAMP problem for softmax
+    (Prop 3.3). `y` are the (low-precision-computed) softmax inputs; `z` may
+    be supplied to reuse a softmax already computed by the caller.
+    """
+    if z is None:
+        z = masked_softmax(y, where)
+    crit = 2.0 * z * (1.0 - z) * jnp.abs(y)
+    mask = crit > tau
+    if where is not None:
+        mask = mask & where
+    return mask
+
+
+def select_softmax_relaxed(y: jnp.ndarray, tau: float,
+                           where: Optional[jnp.ndarray] = None,
+                           axis: int = -1) -> jnp.ndarray:
+    """Paper rule (9): q_j = 1  iff  |y_j| e^{y_j} > tau * max_i |y_i| e^{y_i}.
+
+    Computed in log space for range safety:
+        s_j = y_j + log|y_j|   (s_j = -inf at y_j = 0, which is correct:
+                                the criterion value |0|*e^0 = 0 never selects)
+        q_j = s_j > log(tau) + max_i s_i
+    Independent of the softmax normalizer -> online-softmax compatible.
+    """
+    if not (0.0 <= tau < 1.0):
+        raise ValueError(f"relaxed LAMP needs 0 <= tau < 1, got {tau}")
+    s = y + jnp.log(jnp.abs(y))  # -inf at y == 0 by IEEE semantics
+    s = _masked(s, where, _NEG_INF)
+    smax = jnp.max(s, axis=axis, keepdims=True)
+    if tau == 0.0:
+        mask = jnp.isfinite(s)  # select everything nonzero in-domain
+    else:
+        mask = s > (jnp.log(tau) + smax)
+    if where is not None:
+        mask = mask & where
+    return mask
+
+
+def select_softmax_relaxed_ln(y: jnp.ndarray, tau: float, row_lengths: jnp.ndarray,
+                              n_ref: int = 1024,
+                              where: Optional[jnp.ndarray] = None,
+                              axis: int = -1) -> jnp.ndarray:
+    """Length-normalized relaxed rule (App C.5): tau_row = tau * sqrt(n_ref / n).
+
+    `row_lengths` broadcasts against y with the last axis removed, giving the
+    valid length n of each softmax row (for causal row i, n = i + 1).
+    """
+    s = y + jnp.log(jnp.abs(y))
+    s = _masked(s, where, _NEG_INF)
+    smax = jnp.max(s, axis=axis, keepdims=True)
+    tau_row = tau * jnp.sqrt(n_ref / jnp.maximum(row_lengths, 1).astype(jnp.float32))
+    tau_row = jnp.minimum(tau_row, 1.0 - 1e-6)[..., None]
+    mask = s > (jnp.log(tau_row) + smax)
+    if where is not None:
+        mask = mask & where
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm rule (Props 3.1 / 3.2)
+# ---------------------------------------------------------------------------
+
+def select_rmsnorm(y: jnp.ndarray, tau: float, axis: int = -1) -> jnp.ndarray:
+    """Greedy almost-optimal solution of componentwise LAMP for RMSNorm.
+
+    Prop 3.2: sort entries by descending square, pick the smallest prefix s
+    with  sum_{i<=s} y_i^2 + 2 y_min^2 >= (2 - tau) ||y||^2, select that
+    prefix. Returns an exact-size mask (rank-based, tie-safe).
+    """
+    y = jnp.moveaxis(jnp.asarray(y, jnp.float32), axis, -1)
+    y2 = y * y
+    total = jnp.sum(y2, axis=-1, keepdims=True)
+    ymin2 = jnp.min(y2, axis=-1, keepdims=True)
+    order = jnp.argsort(-y2, axis=-1)
+    sorted_desc = jnp.take_along_axis(y2, order, axis=-1)
+    csum = jnp.cumsum(sorted_desc, axis=-1)
+    need = (2.0 - tau) * total - 2.0 * ymin2
+    # smallest s >= 0 with prefix_sum(s) >= need, where prefix_sum(0) = 0:
+    # s = [need > 0] + #(csum < need), capped at n (select-all fallback).
+    s = jnp.sum(csum < need, axis=-1, keepdims=True) + (need > 0)
+    n = y.shape[-1]
+    s = jnp.minimum(s, n)
+    ranks = jnp.argsort(order, axis=-1)  # rank of each entry in the sorted order
+    mask = ranks < s
+    return jnp.moveaxis(mask, -1, axis)
+
+
+def kappa_c_rmsnorm(y: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Exact kappa_c for RMSNorm (Prop 3.1), q != all-ones. 1-D inputs."""
+    y = jnp.asarray(y, jnp.float32)
+    q = jnp.asarray(q, bool)
+    y2 = y * y
+    total = jnp.sum(y2)
+    n_out = jnp.sum(~q)
+    min_out = jnp.min(jnp.where(~q, y2, jnp.inf))
+    sum_in = jnp.sum(jnp.where(q, y2, 0.0))
+    general = 2.0 * (1.0 - min_out / total) - sum_in / total
+    single = jnp.maximum(min_out / total, 1.0 - min_out / total)
+    return jnp.where(n_out == 1, single, general)
+
+
+# ---------------------------------------------------------------------------
+# Softmax kappa evaluators (for tests / analysis)
+# ---------------------------------------------------------------------------
+
+def kappa_1_softmax(y: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Exact l1-normwise kappa for softmax (Prop 3.3): 2 max_{j not in Omega}
+    z_j (1 - z_j) |y_j|. 1-D inputs; q != all-ones."""
+    z = jax.nn.softmax(jnp.asarray(y, jnp.float32))
+    crit = 2.0 * z * (1.0 - z) * jnp.abs(y)
+    return jnp.max(jnp.where(jnp.asarray(q, bool), -jnp.inf, crit))
+
+
+def kappa_c_softmax(y: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Exact componentwise kappa for softmax (App B):
+    sum_{j not in Omega} z_j |y_j| + max_{i not in Omega} (1 - 2 z_i) |y_i|."""
+    y = jnp.asarray(y, jnp.float32)
+    q = jnp.asarray(q, bool)
+    z = jax.nn.softmax(y)
+    u = z * jnp.abs(y)
+    v = (1.0 - 2.0 * z) * jnp.abs(y)
+    return jnp.sum(jnp.where(q, 0.0, u)) + jnp.max(jnp.where(q, -jnp.inf, v))
+
+
+# ---------------------------------------------------------------------------
+# Entrywise activation rule (Sec 3.1)
+# ---------------------------------------------------------------------------
+
+def select_activation(y: jnp.ndarray, tau: float,
+                      phi: Callable[[jnp.ndarray], jnp.ndarray],
+                      dphi: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+                      eps: float = 1e-30) -> jnp.ndarray:
+    """Sec 3.1: M is diagonal with entries phi'(y) y / phi(y); select where
+    the magnitude exceeds tau. `dphi` defaults to jax.grad of phi."""
+    y = jnp.asarray(y, jnp.float32)
+    if dphi is None:
+        dphi = jax.vmap(jax.grad(lambda t: phi(t).sum() if phi(t).ndim else phi(t)))
+        flat = y.reshape(-1)
+        d = dphi(flat).reshape(y.shape)
+    else:
+        d = dphi(y)
+    f = phi(y)
+    crit = jnp.abs(d * y) / jnp.maximum(jnp.abs(f), eps)
+    return crit > tau
+
+
+def gelu_criterion(y: jnp.ndarray) -> jnp.ndarray:
+    """|gelu'(y) * y / gelu(y)| computed stably (exact erf-based GELU)."""
+    y = jnp.asarray(y, jnp.float32)
+    phi = jax.nn.gelu(y, approximate=False)
+    d = jax.vmap(jax.grad(lambda t: jax.nn.gelu(t, approximate=False)))(y.reshape(-1)).reshape(y.shape)
+    return jnp.abs(d * y) / jnp.maximum(jnp.abs(phi), 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Bookkeeping helpers
+# ---------------------------------------------------------------------------
+
+def recompute_rate(mask: jnp.ndarray, where: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Fraction of selectable entries flagged for recompute (paper's metric:
+    divided by the number of inner products inside the causal mask)."""
+    if where is None:
+        return jnp.mean(mask.astype(jnp.float32))
+    sel = jnp.sum((mask & where).astype(jnp.float32))
+    tot = jnp.maximum(jnp.sum(where.astype(jnp.float32)), 1.0)
+    return sel / tot

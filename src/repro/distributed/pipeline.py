@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+For meshes with a `stage` axis: the layer stack is split into S contiguous
+stages; microbatches flow through stages with activations handed to the next
+stage by `jax.lax.ppermute`. The schedule is the classic GPipe fill-drain
+loop (S + M - 1 ticks for M microbatches), expressed as a lax.fori over a
+rotating buffer so it stays a single compiled program.
+
+This is an optional parallelism mode (the assigned production meshes are
+DP x TP); it exists so the framework covers PP for depth-dominated models
+(mistral-large-123b at 88 layers is the natural customer) and is exercised
+by tests on a host mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(mesh: Mesh, stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+                   stage_params: Any, x_mb: jnp.ndarray, *,
+                   stage_axis: str = "stage") -> jnp.ndarray:
+    """Run x_mb (M, mb, ...) microbatches through S pipeline stages.
+
+    stage_params: pytree whose leaves have leading dim S (one slice per
+    stage, sharded over `stage_axis`). stage_fn(params_slice, x) -> y must
+    preserve x's shape (a transformer block stack does).
+    Returns (M, mb, ...) outputs.
+    """
+    S = mesh.shape[stage_axis]
+    M = x_mb.shape[0]
+    if M < S:
+        raise ValueError(f"need microbatches >= stages, got {M} < {S}")
+
+    def per_stage(params_local, x_local):
+        # params_local: leaves (1, ...) -- this stage's slice
+        # x_local: (M, mb, ...) full microbatch stream (replicated)
+        p = jax.tree.map(lambda t: t[0], params_local)
+        sid = jax.lax.axis_index(stage_axis)
+        n_ticks = M + S - 1
+        mb_shape = x_local.shape[1:]
+
+        def tick(t, carry):
+            buf, out = carry
+            # stage 0 injects microbatch t (if any); others take the handoff
+            inject = jax.lax.dynamic_index_in_dim(
+                x_local, jnp.minimum(t, M - 1), axis=0, keepdims=False)
+            cur = jnp.where(sid == 0, inject, buf)
+            y = stage_fn(p, cur)
+            # hand off to the next stage (ring; the wraparound write from
+            # the last stage is ignored by stage 0, which always injects)
+            nxt = jax.lax.ppermute(y, stage_axis,
+                                   [(i, (i + 1) % S) for i in range(S)])
+            # last stage records microbatch (t - (S-1)) when valid
+            mb_idx = t - (S - 1)
+            valid = (sid == S - 1) & (mb_idx >= 0)
+            out = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(mb_idx, 0), axis=0),
+                lambda o: o, out)
+            return (nxt, out)
+
+        buf0 = jnp.zeros(mb_shape, x_local.dtype)
+        out0 = jnp.zeros((M,) + mb_shape, x_local.dtype)
+        _, out = jax.lax.fori_loop(0, n_ticks, tick, (buf0, out0))
+        # broadcast results from the last stage to all stages (psum of a
+        # one-hot-masked buffer == broadcast, and is a legal collective)
+        out = jax.lax.psum(jnp.where(sid == S - 1, out, 0.0), stage_axis)
+        return out
+
+    pspec = jax.tree.map(lambda _: P(stage_axis), stage_params)
+    fn = shard_map(per_stage, mesh=mesh,
+                   in_specs=(pspec, P()), out_specs=P(),
+                   check_rep=False)
+    return fn(stage_params, x_mb)
+
+
+def split_stages(params_stacked: Any, n_stages: int) -> Any:
+    """Reshape stacked layer params (L, ...) -> (S, L//S, ...) stage slices."""
+    def one(t):
+        L = t.shape[0]
+        if L % n_stages:
+            raise ValueError(f"L={L} not divisible by stages={n_stages}")
+        return t.reshape(n_stages, L // n_stages, *t.shape[1:])
+    return jax.tree.map(one, params_stacked)

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True off-TPU (this container is CPU-only; interpret
+mode executes the kernel bodies in Python for correctness validation) and
+False on TPU, where the kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_decode import flash_decode as _flash_decode
+from .lamp_attention import lamp_flash_attention as _lamp_flash_attention
+from .ps_matmul import ps_matmul as _ps_matmul
+from .rmsnorm import rmsnorm as _rmsnorm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lamp_flash_attention(q, k, v, *, mu: int = 7, tau: float = 0.05,
+                         causal: bool = True, block_q: int = 128,
+                         block_k: int = 128, k_subtile: int = 32,
+                         interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _lamp_flash_attention(q, k, v, mu=mu, tau=tau, causal=causal,
+                                 block_q=block_q, block_k=block_k,
+                                 k_subtile=k_subtile, interpret=interpret)
+
+
+def flash_decode(q, k_cache, v_cache, length, *, mu: int = 7, tau: float = 0.05,
+                 block_k: int = 512, k_subtile: int = 32, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_decode(q, k_cache, v_cache, length, mu=mu, tau=tau,
+                         block_k=block_k, k_subtile=k_subtile,
+                         interpret=interpret)
+
+
+def ps_matmul(a, b, *, mu: int = 7, block_m: int = 128, block_n: int = 128,
+              block_k: int = 128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ps_matmul(a, b, mu=mu, block_m=block_m, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _rmsnorm(x, w, eps=eps, block_rows=block_rows, interpret=interpret)

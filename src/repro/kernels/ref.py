@@ -1,0 +1,167 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each oracle reproduces the kernel's *exact* numerical semantics (same block
+sizes, same PS(mu) rounding points, same running-threshold selection), so
+tests can assert tight tolerances rather than loose "close enough" bounds.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.numerics import round_to_mantissa
+
+_NEG = -1e30
+
+
+def ps_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, mu: int, block_k: int) -> jnp.ndarray:
+    """Oracle for the ps_matmul kernel: FP32 accumulation inside each
+    K-subtile of size block_k, PS(mu) rounding of the running accumulator
+    when each subtile's partial sum is added (TPU deployment tier)."""
+    M, K = a.shape
+    N = b.shape[1]
+    nk = -(-K // block_k)
+    pad = nk * block_k - K
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    acc = jnp.zeros((M, N), jnp.float32)
+    for i in range(nk):
+        part = a[:, i * block_k:(i + 1) * block_k].astype(jnp.float32) @ \
+            b[i * block_k:(i + 1) * block_k].astype(jnp.float32)
+        acc = round_to_mantissa(acc + part, mu) if mu < 23 else acc + part
+    return acc
+
+
+def _subtile_qk(q, kb, mu, sub):
+    """(bq, D) x (D, bk) with PS(mu) subtile accumulation over D."""
+    D = q.shape[-1]
+    ns = -(-D // sub)
+    acc = jnp.zeros((q.shape[0], kb.shape[1]), jnp.float32)
+    for s in range(ns):
+        part = q[:, s * sub:(s + 1) * sub] @ kb[s * sub:(s + 1) * sub]
+        acc = round_to_mantissa(acc + part, mu) if mu < 23 else acc + part
+    return acc
+
+
+def lamp_flash_attention_ref(q, k, v, *, mu: int, tau: float, causal: bool,
+                             block_q: int, block_k: int, k_subtile: int,
+                             scale: Optional[float] = None,
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the lamp_attention kernel.
+
+    One-pass relaxed-LAMP flash attention: per (head, q-block), stream
+    k-blocks; y_low from PS(mu)-subtile QK accumulation; select with rule (9)
+    against the RUNNING max of s = y + log|y| (conservative tier); recompute
+    selected logits exactly; online softmax. Returns (out, n_selected)."""
+    B, H, T, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    out = jnp.zeros((B, H, T, D), jnp.float32)
+    nsel_total = jnp.zeros((), jnp.float32)
+    log_tau = jnp.log(jnp.maximum(tau, 1e-30))
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    nq, nk = -(-T // block_q), -(-S // block_k)
+    for b in range(B):
+        for h in range(H):
+            for iq in range(nq):
+                q0 = iq * block_q
+                qb = qf[b, h, q0:q0 + block_q]
+                m = jnp.full((qb.shape[0],), _NEG)
+                l = jnp.zeros((qb.shape[0],))
+                acc = jnp.zeros((qb.shape[0], D))
+                smax = jnp.full((qb.shape[0],), _NEG)
+                for ik in range(nk):
+                    k0 = ik * block_k
+                    kb = kf[b, h, k0:k0 + block_k].T
+                    vb = vf[b, h, k0:k0 + block_k]
+                    y_low = _subtile_qk(qb, kb, mu, k_subtile)
+                    ok = jnp.ones(y_low.shape, bool)
+                    if causal:
+                        qi = q0 + jnp.arange(qb.shape[0])[:, None]
+                        kj = k0 + jnp.arange(kb.shape[1])[None, :]
+                        ok = kj <= qi
+                    s = jnp.where(ok, y_low + jnp.log(jnp.abs(y_low)), _NEG)
+                    smax = jnp.maximum(smax, jnp.max(s, axis=-1))
+                    sel = ok & (s > log_tau + smax[:, None])
+                    y_exact = qb @ kb
+                    y = jnp.where(sel, y_exact, y_low)
+                    y = jnp.where(ok, y, _NEG)
+                    nsel_total = nsel_total + jnp.sum(sel)
+                    m_new = jnp.maximum(m, jnp.max(y, axis=-1))
+                    p = jnp.where(ok, jnp.exp(y - m_new[:, None]), 0.0)
+                    corr = jnp.exp(m - m_new)
+                    l = l * corr + jnp.sum(p, axis=-1)
+                    acc = acc * corr[:, None] + p @ vb
+                    m = m_new
+                o = acc / jnp.maximum(l, 1e-30)[:, None]
+                out = out.at[b, h, q0:q0 + block_q].set(o)
+    return out, nsel_total
+
+
+def flash_decode_ref(q, k_cache, v_cache, length, *, mu: int, tau: float,
+                     block_k: int, k_subtile: int,
+                     scale: Optional[float] = None,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the flash_decode kernel pair (exact two-pass rule (9)):
+    pass 1 computes the global row max of s = y + log|y| over valid cache
+    entries; pass 2 selects, recomputes, and online-softmaxes. q: (B,H,1,D),
+    caches (B,H,S,D), length (B,)."""
+    B, H, _, D = q.shape
+    S = k_cache.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    log_tau = jnp.log(jnp.maximum(tau, 1e-30))
+    out = jnp.zeros((B, H, 1, D), jnp.float32)
+    nsel = jnp.zeros((), jnp.float32)
+    nk = -(-S // block_k)
+    for b in range(B):
+        valid = jnp.arange(S) < length[b]
+        for h in range(H):
+            qr = qf[b, h, 0]
+            # pass 1: y_low blocks + global smax
+            smax = _NEG
+            y_rows = []
+            for ik in range(nk):
+                k0 = ik * block_k
+                kb = kf[b, h, k0:k0 + block_k].T
+                y_low = _subtile_qk(qr[None], kb, mu, k_subtile)[0]
+                okb = valid[k0:k0 + block_k]
+                s = jnp.where(okb, y_low + jnp.log(jnp.abs(y_low)), _NEG)
+                smax = jnp.maximum(smax, jnp.max(s))
+                y_rows.append((y_low, s, okb))
+            # pass 2
+            m = _NEG
+            l = 0.0
+            acc = jnp.zeros((D,))
+            for ik, (y_low, s, okb) in enumerate(y_rows):
+                k0 = ik * block_k
+                kb = kf[b, h, k0:k0 + block_k].T
+                vb = vf[b, h, k0:k0 + block_k]
+                sel = okb & (s > log_tau + smax)
+                y_exact = (qr[None] @ kb)[0]
+                y = jnp.where(sel, y_exact, y_low)
+                y = jnp.where(okb, y, _NEG)
+                nsel = nsel + jnp.sum(sel)
+                m_new = jnp.maximum(m, jnp.max(y))
+                p = jnp.where(okb, jnp.exp(y - m_new), 0.0)
+                corr = jnp.exp(m - m_new)
+                l = l * corr + jnp.sum(p)
+                acc = acc * corr + p @ vb
+                m = m_new
+            out = out.at[b, h, 0].set(acc / jnp.maximum(l, 1e-30))
+    return out, nsel
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)

@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first (before any jax import) -- jax locks the
+device count at first init, and only the dry-run wants 512 host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Each cell writes results/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, collective bytes, and roofline terms.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable
+from repro.distributed import sharding as SH
+from repro.launch import roofline as RL
+from repro.launch import specs as SP
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "multi" if multi_pod else "single"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    """Lower + compile one cell; return the result record."""
+    t0 = time.time()
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shp)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+                "status": "skipped", "reason": reason}
+
+    overrides = overrides or {}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cell = SP.input_specs(arch, shape_name)
+    p_shape = cell["params"]
+    pspecs = SH.param_specs(p_shape, mesh)
+    data_shards = mesh.shape["data"] * mesh.shape.get("pod", 1)
+
+    # optimized-system defaults (EXPERIMENTS Sec Perf); explicit overrides win
+    mk = dict(overrides.get("model_kwargs") or {})
+    if cfg.family == "rwkv6" and shp.kind in ("train", "prefill"):
+        mk.setdefault("wkv_chunk", 64)
+    if cfg.family == "moe" and shp.kind == "decode":
+        mk.setdefault("moe_dropless", False)
+        mk.setdefault("moe_groups",
+                      data_shards if shp.global_batch % data_shards == 0 else 1)
+    overrides = {**overrides, "model_kwargs": mk}
+
+    with jax.set_mesh(mesh):  # lets shard_hint() resolve logical axis names
+        if shp.kind == "train":
+            opt_cfg = adamw.AdamWConfig()
+            step = ST.make_train_step(
+                cfg, opt_cfg,
+                num_microbatches=overrides.get("num_microbatches", 1),
+                attn_impl=overrides.get("attn_impl", "auto"),
+                moe_groups=overrides.get("moe_groups",
+                                         data_shards if cfg.family == "moe" else 1),
+                model_kwargs=overrides.get("model_kwargs"))
+            ospecs = SH.opt_specs(cell["opt"], pspecs)
+            bspecs = SH.batch_specs(cell["batch"], mesh)
+            jitted = jax.jit(step, in_shardings=(pspecs, ospecs, bspecs),
+                             out_shardings=(pspecs, ospecs, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(p_shape, cell["opt"], cell["batch"])
+        elif shp.kind == "prefill":
+            step = ST.make_prefill_step(
+                cfg, use_lamp=overrides.get("use_lamp", True),
+                attn_impl=overrides.get("attn_impl", "auto"),
+                moe_groups=overrides.get("moe_groups",
+                                         data_shards if cfg.family == "moe" else 1),
+                model_kwargs=overrides.get("model_kwargs"))
+            cspecs = SH.cache_specs(cell["cache"], mesh)
+            bspecs = SH.batch_specs(cell["batch"], mesh)
+            jitted = jax.jit(step, in_shardings=(pspecs, cspecs, bspecs),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_shape, cell["cache"], cell["batch"])
+        else:  # decode
+            step = ST.make_serve_step(cfg, use_lamp=overrides.get("use_lamp", True),
+                                      model_kwargs=overrides.get("model_kwargs"))
+            cspecs = SH.cache_specs(cell["cache"], mesh)
+            tspec = SH.batch_specs(cell["tokens"], mesh,
+                                   shard_batch=shp.global_batch % data_shards == 0)
+            jitted = jax.jit(step, in_shardings=(pspecs, cspecs, tspec),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(p_shape, cell["cache"], cell["tokens"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": _mesh_name(multi_pod),
+           "status": "ok", "n_devices": int(n_dev),
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+           "overrides": overrides}
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+
+    # Trip-count-aware re-analysis: XLA's cost_analysis counts while-loop
+    # (scan) bodies once, under-reporting scan-over-layers models by ~L
+    # (see launch/hlo_cost.py). All roofline terms use the corrected values.
+    from repro.launch import hlo_cost
+    hlo = compiled.as_text()
+    hc = hlo_cost.analyze(hlo)
+    flops = hc["flops"]
+    byts = hc["bytes"]
+    rec["cost"] = {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "xla_flops_raw_loopbody_once": xla_flops,
+        "xla_bytes_raw_loopbody_once": xla_bytes,
+    }
+    rec["collectives"] = hc["collectives"]
+    coll_total = float(hc["collective_bytes"])
+    rec["roofline"] = RL.roofline_terms(flops, byts, coll_total)
+
+    mf = RL.model_flops(cfg, p_shape, shp.kind, shp.global_batch, shp.seq_len)
+    rec["model_flops_total"] = mf
+    rec["model_flops_per_device"] = mf / n_dev
+    rec["useful_flops_ratio"] = (mf / n_dev) / flops if flops else 0.0
+    rec.update(RL.active_params(p_shape, cfg))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict, e.g. '{\"num_microbatches\": 4}'")
+    ap.add_argument("--tag", default="", help="suffix for override experiments")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    overrides = json.loads(args.overrides) if args.overrides else None
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                fname = outdir / f"{arch}__{shape}__{_mesh_name(mp)}{tag}.json"
+                if fname.exists() and not args.force:
+                    print(f"[cached] {fname.name}")
+                    continue
+                print(f"[run] {arch} x {shape} x {_mesh_name(mp)} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mp, overrides)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": _mesh_name(mp), "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                rec["overrides_tag"] = args.tag
+                fname.write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']} "
+                             f"c={r['compute_s']:.3g}s m={r['memory_s']:.3g}s "
+                             f"x={r['collective_s']:.3g}s "
+                             f"compile={rec['compile_s']}s")
+                elif st == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{st}] {fname.name}{extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

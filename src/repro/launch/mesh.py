@@ -1,0 +1,33 @@
+"""Production mesh builders (assignment spec).
+
+Single pod: (16, 16) = (data, model) -- 256 chips of TPU v5e.
+Multi-pod:  (2, 16, 16) = (pod, data, model) -- 512 chips.
+
+Functions, not module constants: importing this module never touches jax
+device state (required so smoke tests see 1 CPU device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever local devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants for the roofline model (assignment spec).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per link

@@ -1,0 +1,120 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per device; cost_analysis on the CPU backend reports post-SPMD
+per-device numbers, equivalent to total/chips):
+
+    compute_s    = flops_per_device / PEAK_FLOPS_BF16
+    memory_s     = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / ICI_BW_PER_LINK
+
+collective bytes are parsed from the compiled HLO: the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async '-start' counted once, '-done' skipped). This is a
+first-order traffic proxy (ring all-reduce really moves ~2x), stated as such
+in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+from .mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective category from (compiled) HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[0]:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)
+        if len(lhs) != 2:
+            continue
+        # shapes between '=' and the op name
+        seg = lhs[1][: m.start() - len(lhs[0]) - 1] if m.start() > len(lhs[0]) else lhs[1]
+        total = 0
+        for sm in _SHAPE_RE.finditer(seg):
+            total += shape_bytes(sm.group(1), sm.group(2))
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, Any]:
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / ICI_BW_PER_LINK
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        # fraction of ideal: if terms fully overlap, step time = max(terms);
+        # roofline fraction = dominant / sum (1.0 = perfectly balanced on
+        # one roof, lower = time wasted on non-dominant roofs if serial).
+        "overlap_efficiency": bound / total if total else 0.0,
+    }
+
+
+def active_params(p_shape, cfg) -> Dict[str, float]:
+    """Total and active (MoE-discounted) parameter counts from shapes."""
+    import jax
+
+    def path_str(path):
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(p.name)
+        return "/".join(parts)
+
+    total = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(p_shape)[0]
+    for path, leaf in flat:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "we_in" in path_str(path) or "we_out" in path_str(path):
+            expert += n
+    active = total - expert
+    if cfg.n_experts:
+        active += expert * cfg.top_k / cfg.n_experts
+    return {"n_params": float(total), "n_active": float(active)}
+
+
+def model_flops(cfg, p_shape, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference forward), N = active."""
+    n = active_params(p_shape, cfg)["n_active"]
+    tokens = batch * (seq if kind in ("train", "prefill") else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,63 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) cell.
+
+No device allocation: params come from jax.eval_shape over the real
+initializer, inputs/caches are ShapeDtypeStructs, and the dry-run lowers
+against them directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ModelConfig, get_config
+from repro.models import api
+from repro.optim import adamw
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_shape(p_shape):
+    return jax.eval_shape(adamw.init_state, p_shape)
+
+
+def batch_specs_for(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """Training / prefill batch: tokens + stub modality inputs."""
+    b: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.family == "whisper":
+        b["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model),
+                                           jnp.bfloat16)
+    if cfg.family == "llava":
+        b["image_embeds"] = jax.ShapeDtypeStruct((batch, cfg.n_patches, cfg.d_model),
+                                                 jnp.bfloat16)
+    return b
+
+
+def cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, batch, max_len, jnp.bfloat16))
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Everything the dry-run needs for one cell (shapes only)."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    out: Dict[str, Any] = {"cfg": cfg, "shape": shp}
+    p_shape = params_shape(cfg)
+    out["params"] = p_shape
+    if shp.kind == "train":
+        out["batch"] = batch_specs_for(cfg, shp.global_batch, shp.seq_len)
+        out["opt"] = opt_shape(p_shape)
+    elif shp.kind == "prefill":
+        out["batch"] = batch_specs_for(cfg, shp.global_batch, shp.seq_len)
+        out["cache"] = cache_shape(cfg, shp.global_batch,
+                                   shp.seq_len + cfg.n_patches)
+    elif shp.kind == "decode":
+        out["tokens"] = jax.ShapeDtypeStruct((shp.global_batch, 1), jnp.int32)
+        out["cache"] = cache_shape(cfg, shp.global_batch,
+                                   shp.seq_len + cfg.n_patches)
+    return out

@@ -1,0 +1,83 @@
+"""Jittable step functions: train_step, prefill_step, serve_step.
+
+These are the units the dry-run lowers and the launchers execute. Training
+uses remat'd scan-over-layers + optional microbatch gradient accumulation;
+serving runs with the LAMP policy enabled (the paper's technique is an
+inference-time feature).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.optim import adamw
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
+                    num_microbatches: int = 1, attn_impl: str = "auto",
+                    moe_groups: int = 1, use_lamp: bool = False,
+                    lr_schedule=None, model_kwargs: Optional[Dict] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    model_kwargs = model_kwargs or {}
+
+    def lossf(p, b):
+        return api.loss_fn(cfg, p, b, remat=True, attn_impl=attn_impl,
+                           moe_groups=moe_groups, use_lamp=use_lamp,
+                           **model_kwargs)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(lossf, has_aux=True)(params, batch)
+        else:
+            M = num_microbatches
+
+            def split(x):
+                return x.reshape(M, x.shape[0] // M, *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, b):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(lossf, has_aux=True)(params, b)
+                g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss / M
+            metrics = {}
+        lr = lr_schedule(opt_state.step) if lr_schedule is not None else None
+        params, opt_state, om = adamw.apply_updates(opt_cfg, params, grads,
+                                                    opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg, *, use_lamp: bool = True, attn_impl: str = "auto",
+                      moe_groups: int = 1, model_kwargs: Optional[Dict] = None):
+    model_kwargs = model_kwargs or {}
+
+    def prefill_step(params, cache, batch):
+        return api.prefill(cfg, params, batch, cache, use_lamp=use_lamp,
+                           attn_impl=attn_impl,
+                           **({"moe_groups": moe_groups}
+                              if cfg.family == "moe" else {}),
+                           **model_kwargs)
+    return prefill_step
+
+
+def make_serve_step(cfg, *, use_lamp: bool = True,
+                    model_kwargs: Optional[Dict] = None):
+    """One batched decode step: (params, cache, tokens) -> (logits, cache)."""
+    model_kwargs = model_kwargs or {}
+
+    def serve_step(params, cache, tokens):
+        return api.decode_step(cfg, params, cache, tokens, use_lamp=use_lamp,
+                               **model_kwargs)
+    return serve_step

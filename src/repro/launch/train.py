@@ -1,0 +1,73 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --reduced \
+        --steps 50 --batch 8 --seq 128
+
+Full-size configs target the production mesh (run under a real TPU runtime);
+--reduced trains the family-preserving smoke config on the host mesh, which
+is what this CPU container can execute end-to-end.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs, reduced as reduce_cfg
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import adamw
+from repro.runtime.train_loop import TrainLoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           checkpoint_every=args.checkpoint_every,
+                           checkpoint_dir=args.checkpoint_dir,
+                           num_microbatches=args.microbatches)
+    data = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch)
+
+    extra = None
+    if cfg.family == "whisper":
+        def extra(step):
+            return {"frames": jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, cfg.enc_seq, cfg.d_model),
+                jnp.float32) * 0.1}
+    elif cfg.family == "llava":
+        def extra(step):
+            return {"image_embeds": jax.random.normal(
+                jax.random.PRNGKey(step), (args.batch, cfg.n_patches, cfg.d_model),
+                jnp.float32) * 0.1}
+
+    out = train(cfg, mesh, loop, adamw.AdamWConfig(lr=args.lr),
+                data_cfg=data, extra_batch=extra)
+    losses = [m["loss"] for m in out["metrics"]]
+    if losses:
+        print(f"[train] first loss {losses[0]:.4f} -> last {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

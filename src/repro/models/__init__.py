@@ -1,0 +1,11 @@
+"""Model zoo: 10 assigned architectures + GPT-2 family for the paper repro."""
+
+from . import api, hymba, layers, moe, rwkv, transformer, whisper
+from .api import (
+    init_params,
+    loss_fn,
+    forward_logits,
+    init_cache,
+    prefill,
+    decode_step,
+)

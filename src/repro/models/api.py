@@ -1,0 +1,114 @@
+"""Uniform model API across all families.
+
+    init_params(cfg, key)                     -> params pytree
+    loss_fn(cfg, params, batch, **kw)         -> (loss, metrics)   [train]
+    forward_logits(cfg, params, batch, **kw)  -> logits             [eval]
+    init_cache(cfg, batch_size, max_len)      -> cache/state pytree
+    prefill(cfg, params, batch, cache, **kw)  -> (last_logits, cache)
+    decode_step(cfg, params, cache, tok, **kw)-> (logits, cache)
+
+`batch` is a dict: tokens (B,S) always; frames (B,enc_seq,d) for whisper;
+image_embeds (B,P,d) for llava. Modality frontends are stubs per the
+assignment: those arrays arrive precomputed from input_specs().
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from . import hymba, rwkv, transformer, whisper
+
+_DENSE_FAMILIES = ("dense", "moe", "gpt2", "llava")
+
+
+def init_params(cfg, key):
+    if cfg.family in _DENSE_FAMILIES:
+        return transformer.init_params(cfg, key)
+    if cfg.family == "rwkv6":
+        return rwkv.init_params(cfg, key)
+    if cfg.family == "hymba":
+        return hymba.init_params(cfg, key)
+    if cfg.family == "whisper":
+        return whisper.init_params(cfg, key)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def loss_fn(cfg, params, batch: Dict[str, Any], **kw):
+    if cfg.family in _DENSE_FAMILIES:
+        return transformer.loss_fn(cfg, params, batch, **kw)
+    if cfg.family == "rwkv6":
+        kw.pop("use_lamp", None)
+        kw.pop("attn_impl", None)
+        kw.pop("moe_groups", None)
+        return rwkv.loss_fn(cfg, params, batch, **kw)
+    if cfg.family == "hymba":
+        kw.pop("moe_groups", None)
+        return hymba.loss_fn(cfg, params, batch, **kw)
+    if cfg.family == "whisper":
+        kw.pop("moe_groups", None)
+        return whisper.loss_fn(cfg, params, batch, **kw)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def forward_logits(cfg, params, batch: Dict[str, Any], **kw):
+    if cfg.family in _DENSE_FAMILIES:
+        logits, _ = transformer.forward(cfg, params, batch["tokens"],
+                                        image_embeds=batch.get("image_embeds"),
+                                        **kw)
+        return logits
+    if cfg.family == "rwkv6":
+        kw.pop("use_lamp", None)
+        kw.pop("attn_impl", None)
+        logits, _, _ = rwkv.forward(cfg, params, batch["tokens"], **kw)
+        return logits
+    if cfg.family == "hymba":
+        logits, _, _ = hymba.forward(cfg, params, batch["tokens"], **kw)
+        return logits
+    if cfg.family == "whisper":
+        logits, _ = whisper.forward(cfg, params, batch["tokens"],
+                                    frames=batch["frames"], **kw)
+        return logits
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.family in _DENSE_FAMILIES:
+        return transformer.init_cache(cfg, batch_size, max_len, dtype)
+    if cfg.family == "rwkv6":
+        return rwkv.init_state(cfg, batch_size)
+    if cfg.family == "hymba":
+        return hymba.init_cache(cfg, batch_size, max_len, dtype)
+    if cfg.family == "whisper":
+        return whisper.init_cache(cfg, batch_size, max_len, dtype)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def prefill(cfg, params, batch: Dict[str, Any], cache, **kw):
+    if cfg.family in _DENSE_FAMILIES:
+        return transformer.prefill(cfg, params, batch["tokens"], cache,
+                                   image_embeds=batch.get("image_embeds"), **kw)
+    if cfg.family == "rwkv6":
+        kw.pop("use_lamp", None)
+        kw.pop("attn_impl", None)
+        return rwkv.prefill(cfg, params, batch["tokens"], cache, **kw)
+    if cfg.family == "hymba":
+        return hymba.prefill(cfg, params, batch["tokens"], cache, **kw)
+    if cfg.family == "whisper":
+        return whisper.prefill(cfg, params, batch["tokens"], cache,
+                               frames=batch["frames"], **kw)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def decode_step(cfg, params, cache, tokens, **kw):
+    if cfg.family in _DENSE_FAMILIES:
+        return transformer.decode_step(cfg, params, cache, tokens, **kw)
+    if cfg.family == "rwkv6":
+        kw.pop("use_lamp", None)
+        return rwkv.decode_step(cfg, params, cache, tokens, **kw)
+    if cfg.family == "hymba":
+        return hymba.decode_step(cfg, params, cache, tokens, **kw)
+    if cfg.family == "whisper":
+        return whisper.decode_step(cfg, params, cache, tokens, **kw)
+    raise ValueError(f"unknown family {cfg.family!r}")

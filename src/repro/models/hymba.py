@@ -1,0 +1,273 @@
+"""Hymba (arXiv:2411.13676): hybrid-head LM -- every layer runs attention
+heads and Mamba (selective-SSM) heads IN PARALLEL on the same input, then
+fuses the two branch outputs (each RMS-normalized, learnable per-branch
+scales). Attention is sliding-window GQA (global attention only in a few
+layers of the real model; we use SWA uniformly, window=cfg.window), which
+keeps the KV cache bounded and makes the arch sub-quadratic -> long_500k
+runs. 128 learnable meta tokens are prepended to the sequence.
+
+LAMP: the attention branch gets the paper's KQ rule; the SSM branch is
+attention-free (no softmax) so LAMP does not apply there (DESIGN.md Sec 6).
+
+Simplifications vs the released checkpoints (noted per DESIGN.md Sec 7):
+one shared Mamba state size N=cfg.ssm_state, depthwise conv kernel 4,
+branch fusion by normalized averaging rather than per-head interleaving.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import LampSite
+
+from . import layers as LY
+
+CONV_K = 4
+
+
+def block_params(cfg, key) -> Dict[str, Any]:
+    d, dt = cfg.d_model, LY.dtype_of(cfg)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 10)
+
+    def lin(k, m, n):
+        return (jax.random.normal(k, (m, n)) * m ** -0.5).astype(dt)
+
+    return {
+        "ln1_w": jnp.zeros((d,), dt),
+        "ln2_w": jnp.zeros((d,), dt),
+        "attn": LY.attn_params(cfg, ks[0]),
+        # mamba branch
+        "m_in": lin(ks[1], d, 2 * d),                 # x and gate
+        "m_conv": (jax.random.normal(ks[2], (CONV_K, d)) * 0.3).astype(dt),
+        "m_dt": lin(ks[3], d, d),
+        "m_dt_bias": jnp.zeros((d,), dt),
+        "m_bc": lin(ks[4], d, 2 * N),                 # B and C projections
+        "m_A_log": (jnp.log(jnp.linspace(1.0, float(N), N))[None, :]
+                    * jnp.ones((d, 1))).astype(jnp.float32),
+        "m_D": jnp.ones((d,), jnp.float32),
+        "m_out": lin(ks[5], d, d),
+        # branch fusion
+        "fuse_na": jnp.zeros((d,), dt),               # rmsnorm scales
+        "fuse_ns": jnp.zeros((d,), dt),
+        "fuse_beta": jnp.ones((2,), jnp.float32),
+        "mlp": LY.mlp_params(cfg, ks[6]),
+    }
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    k_emb, k_blocks, k_meta = jax.random.split(key, 3)
+    blocks = jax.vmap(lambda k: block_params(cfg, k))(
+        jax.random.split(k_blocks, cfg.n_layers))
+    d, dt = cfg.d_model, LY.dtype_of(cfg)
+    return {
+        "embed": LY.embed_params(cfg, k_emb),
+        "meta": (jax.random.normal(k_meta, (cfg.n_meta_tokens, d)) * 0.02).astype(dt),
+        "blocks": blocks,
+        "lnf_w": jnp.zeros((d,), dt),
+    }
+
+
+def _ssm_scan(xf, dt_soft, B_t, C_t, A, D, h0):
+    """Selective scan. xf,(B,T,d); dt (B,T,d); B_t,C_t (B,T,N); A (d,N);
+    h0 (B,d,N). Returns (y (B,T,d), hT)."""
+    dA = jnp.exp(dt_soft[..., None] * (-jnp.exp(A))[None, None])     # (B,T,d,N)
+    dBx = dt_soft[..., None] * B_t[:, :, None, :] * xf[..., None]    # (B,T,d,N)
+
+    def step(h, xs):
+        dA_t, dBx_t, C_tt = xs
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bdn,bn->bd", h, C_tt)
+        return h, y
+
+    xs = (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(C_t, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None]
+    return y, hT
+
+
+def mamba_branch(cfg, p, x, conv_state, ssm_state):
+    """x: (B,T,d). conv_state: (B, CONV_K-1, d); ssm_state: (B, d, N)."""
+    B, T, d = x.shape
+    N = cfg.ssm_state
+    h = x @ p["m_in"]
+    xin, gate = h[..., :d], h[..., d:]
+    # causal depthwise conv (kernel CONV_K)
+    xpad = jnp.concatenate([conv_state.astype(xin.dtype), xin], axis=1)
+    new_conv_state = xpad[:, -(CONV_K - 1):, :]
+    w = p["m_conv"].astype(jnp.float32)
+    xc = sum(xpad[:, i:i + T, :].astype(jnp.float32) * w[i][None, None]
+             for i in range(CONV_K))
+    xf = jax.nn.silu(xc)
+    dt_soft = jax.nn.softplus((xf.astype(x.dtype) @ p["m_dt"]).astype(jnp.float32)
+                              + p["m_dt_bias"].astype(jnp.float32))
+    bc = (xf.astype(x.dtype) @ p["m_bc"]).astype(jnp.float32)
+    B_t, C_t = bc[..., :N], bc[..., N:]
+    y, hT = _ssm_scan(xf, dt_soft, B_t, C_t, p["m_A_log"], p["m_D"],
+                      ssm_state.astype(jnp.float32))
+    y = y * jax.nn.silu(gate.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["m_out"]
+    return out, new_conv_state, hT.astype(ssm_state.dtype)
+
+
+def block_apply(cfg, p, x, *, positions, lamp_site: LampSite, attn_impl: str,
+                state: Dict[str, Any]):
+    h = LY.rms_norm(x, p["ln1_w"])
+    a, rate = LY.attention_sublayer(cfg, p["attn"], h, positions=positions,
+                                    lamp_site=lamp_site, causal=True,
+                                    attn_impl=attn_impl, window=cfg.window)
+    s, conv_st, ssm_st = mamba_branch(cfg, p, h, state["conv"], state["ssm"])
+    beta = p["fuse_beta"].astype(jnp.float32)
+    fused = (LY.rms_norm(a, p["fuse_na"]).astype(jnp.float32) * beta[0]
+             + LY.rms_norm(s, p["fuse_ns"]).astype(jnp.float32) * beta[1]) * 0.5
+    x = x + fused.astype(x.dtype)
+    h = LY.rms_norm(x, p["ln2_w"])
+    x = x + LY.mlp_apply(cfg, p["mlp"], h)
+    return x, {"conv": conv_st, "ssm": ssm_st}, rate
+
+
+def init_state(cfg, batch: int) -> Dict[str, Any]:
+    L, d, N = cfg.n_layers, cfg.d_model, cfg.ssm_state
+    dt = LY.dtype_of(cfg)
+    return {
+        "conv": jnp.zeros((L, batch, CONV_K - 1, d), dt),
+        "ssm": jnp.zeros((L, batch, d, N), jnp.float32),
+    }
+
+
+def forward(cfg, params, tokens, *, use_lamp: bool = False,
+            attn_impl: str = "auto", remat: bool = False, state=None, **_):
+    B, S = tokens.shape
+    M = cfg.n_meta_tokens
+    x = LY.embed(cfg, params["embed"], tokens, jnp.arange(S))
+    meta = jnp.broadcast_to(params["meta"][None], (B, M, cfg.d_model)).astype(x.dtype)
+    x = jnp.concatenate([meta, x], axis=1)
+    positions = jnp.arange(M + S)
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+    if state is None:
+        state = init_state(cfg, B)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, st_l = xs
+        y, st, rate = block_apply(cfg, p_l, xc, positions=positions,
+                                  lamp_site=site, attn_impl=attn_impl, state=st_l)
+        return y, (st, rate)
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    x, (st_out, rates) = jax.lax.scan(body, x, (params["blocks"], state))
+    x = LY.rms_norm(x, params["lnf_w"])
+    logits = LY.unembed(cfg, params["embed"], x[:, M:])
+    return logits, st_out, {"attn_lamp_rate": jnp.mean(rates)}
+
+
+def loss_fn(cfg, params, batch, *, use_lamp: bool = False, remat: bool = True, **_):
+    logits, _, aux = forward(cfg, params, batch["tokens"], use_lamp=use_lamp,
+                             remat=remat)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = batch["tokens"][:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: ring-buffer SWA cache + SSM state
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """SWA cache is bounded at `window` regardless of max_len."""
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    W = min(cfg.window or max_len, max_len) + cfg.n_meta_tokens
+    st = init_state(cfg, batch)
+    return {
+        "k": jnp.zeros((L, batch, W, Hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, W, Hkv, hd), dtype),
+        "conv": st["conv"], "ssm": st["ssm"],
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg, params, tokens, cache, *, use_lamp: bool = True,
+            attn_impl: str = "auto", **_):
+    """Prefill via full forward; keep the last `window` K/V in the ring."""
+    B, S = tokens.shape
+    M = cfg.n_meta_tokens
+    W = cache["k"].shape[2]
+    x = LY.embed(cfg, params["embed"], tokens, jnp.arange(S))
+    meta = jnp.broadcast_to(params["meta"][None], (B, M, cfg.d_model)).astype(x.dtype)
+    x = jnp.concatenate([meta, x], axis=1)
+    positions = jnp.arange(M + S)
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, st_l, ck, cv = xs
+        h = LY.rms_norm(xc, p_l["ln1_w"])
+        q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
+        # write the last W positions into the ring (prefill fills it)
+        take = min(W, M + S)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k[:, -take:].astype(ck.dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v[:, -take:].astype(cv.dtype), 0, axis=1)
+        y, st, _ = block_apply(cfg, p_l, xc, positions=positions, lamp_site=site,
+                               attn_impl=attn_impl, state=st_l)
+        return y, (st, ck, cv)
+
+    st_in = {"conv": cache["conv"], "ssm": cache["ssm"]}
+    x, (st_out, ks, vs) = jax.lax.scan(
+        body, x, (params["blocks"], st_in, cache["k"], cache["v"]))
+    x = LY.rms_norm(x, params["lnf_w"])
+    logits = LY.unembed(cfg, params["embed"], x[:, -1:])
+    new_cache = {"k": ks, "v": vs, **st_out,
+                 "length": jnp.full((B,), M + S, jnp.int32)}
+    return logits, new_cache
+
+
+def decode_step(cfg, params, cache, tokens, *, use_lamp: bool = True, **_):
+    """One token; SWA ring-buffer via modular write, SSM single-step."""
+    B = tokens.shape[0]
+    length = cache["length"]
+    W = cache["k"].shape[2]
+    x = LY.embed(cfg, params["embed"], tokens, length[:, None])
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, ck, cv, conv_st, ssm_st = xs
+        h = LY.rms_norm(xc, p_l["ln1_w"])
+        q, k, v = LY._project_qkv(cfg, p_l["attn"], h, length[:, None])
+        slot = jnp.minimum(length, W - 1)  # ring write (shift-free approximation)
+        bidx = jnp.arange(B)
+        ck = ck.at[bidx, slot].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[bidx, slot].set(v[:, 0].astype(cv.dtype))
+        H, Hkv = cfg.n_heads, cfg.n_kv_heads
+        from repro.core import attention as CA
+        qh = jnp.swapaxes(q, 1, 2)
+        kh = LY._repeat_kv(jnp.moveaxis(ck.astype(x.dtype), 2, 1), H // Hkv)
+        vh = LY._repeat_kv(jnp.moveaxis(cv.astype(x.dtype), 2, 1), H // Hkv)
+        eff = jnp.minimum(length + 1, W)
+        a, _ = CA.decode_attention_lamp(qh, kh, vh, eff, site)
+        a = jnp.swapaxes(a, 1, 2).reshape(B, 1, -1).astype(xc.dtype) @ p_l["attn"]["wo"]
+        s, conv_st, ssm_st = mamba_branch(cfg, p_l, h, conv_st, ssm_st)
+        beta = p_l["fuse_beta"].astype(jnp.float32)
+        fused = (LY.rms_norm(a, p_l["fuse_na"]).astype(jnp.float32) * beta[0]
+                 + LY.rms_norm(s, p_l["fuse_ns"]).astype(jnp.float32) * beta[1]) * 0.5
+        xc = xc + fused.astype(xc.dtype)
+        h2 = LY.rms_norm(xc, p_l["ln2_w"])
+        xc = xc + LY.mlp_apply(cfg, p_l["mlp"], h2)
+        return xc, (ck, cv, conv_st, ssm_st)
+
+    x, (ks, vs, convs, ssms) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"],
+                  cache["conv"], cache["ssm"]))
+    x = LY.rms_norm(x, params["lnf_w"])
+    logits = LY.unembed(cfg, params["embed"], x)
+    new_cache = {"k": ks, "v": vs, "conv": convs, "ssm": ssms,
+                 "length": length + 1}
+    return logits, new_cache

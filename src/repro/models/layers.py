@@ -1,0 +1,311 @@
+"""Shared model layers: norms, RoPE, GQA attention, MLP variants, embeddings.
+
+All layers are pure functions over explicit param pytrees, computed in the
+config dtype with FP32 islands where numerics require (norm statistics,
+attention logits/softmax via repro.core.attention, final logits).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as A
+from repro.core.policy import LampSite
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(cfg, x: jnp.ndarray, p: Dict[str, jnp.ndarray], prefix: str) -> jnp.ndarray:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p[f"{prefix}_w"], p[f"{prefix}_b"])
+    return rms_norm(x, p[f"{prefix}_w"])
+
+
+def norm_params(cfg, key, d: int) -> Dict[str, jnp.ndarray]:
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), dtype_of(cfg)), "b": jnp.zeros((d,), dtype_of(cfg))}
+    return {"w": jnp.zeros((d,), dtype_of(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, T, H, D); positions: (B, T) or (T,). Rotates the first
+    `fraction` of D (glm4 uses 0.5)."""
+    D = x.shape[-1]
+    rot = int(D * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]      # (T, half)
+        ang = ang[None, :, None, :]                                        # (1,T,1,half)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs             # (B,T,half)
+        ang = ang[:, :, None, :]                                           # (B,T,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention sublayer
+# ---------------------------------------------------------------------------
+
+def attn_params(cfg, key) -> Dict[str, jnp.ndarray]:
+    d, hd = cfg.d_model, cfg.hd
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    sc = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H * hd)) * sc).astype(dt),
+        "wk": (jax.random.normal(ks[1], (d, Hkv * hd)) * sc).astype(dt),
+        "wv": (jax.random.normal(ks[2], (d, Hkv * hd)) * sc).astype(dt),
+        "wo": (jax.random.normal(ks[3], (H * hd, d)) * (H * hd) ** -0.5).astype(dt),
+    }
+    if cfg.qk_norm:
+        p["qn_w"] = jnp.zeros((hd,), dt)
+        p["kn_w"] = jnp.zeros((hd,), dt)
+    return p
+
+
+def _project_qkv(cfg, p, x, positions):
+    from repro.distributed.sharding import shard_hint
+    B, T, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    # explicit batch/head sharding hints: without them SPMD propagation can
+    # drop the batch sharding inside scan bodies and replicate the full
+    # attention compute on every device (EXPERIMENTS Sec Perf, hillclimb C)
+    q = shard_hint((x @ p["wq"]).reshape(B, T, H, hd),
+                   "batch", None, "model", None)
+    k = shard_hint((x @ p["wk"]).reshape(B, T, Hkv, hd),
+                   "batch", None, "model", None)
+    v = shard_hint((x @ p["wv"]).reshape(B, T, Hkv, hd),
+                   "batch", None, "model", None)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qn_w"])
+        k = rms_norm(k, p["kn_w"])
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def _repeat_kv(t: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return t
+    return jnp.repeat(t, n_rep, axis=1)
+
+
+def attention_sublayer(cfg, p, x, *, positions, lamp_site: LampSite,
+                       causal: bool = True, attn_impl: str = "auto",
+                       block: int = 512, kv: Optional[Tuple] = None,
+                       window: Optional[int] = None,
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence attention (train / prefill). Returns (out, recompute_rate).
+
+    `kv`: optional externally-supplied (k, v) in (B, T, Hkv, hd) layout for
+    cross-attention (whisper decoder): q comes from x, k/v from the encoder.
+    """
+    B, T, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if kv is not None:
+        k, v = kv
+    # (B, H, T, hd)
+    q = jnp.swapaxes(q, 1, 2)
+    k = _repeat_kv(jnp.swapaxes(k, 1, 2), H // Hkv)
+    v = _repeat_kv(jnp.swapaxes(v, 1, 2), H // Hkv)
+    window = window if window is not None else cfg.window
+
+    if attn_impl == "auto":
+        attn_impl = "full" if max(T, k.shape[2]) <= 2048 else "chunked"
+
+    rate = jnp.zeros((), jnp.float32)
+    if attn_impl == "full":
+        if lamp_site.enabled:
+            if lamp_site.rule == "random":
+                # App C.4 control arm: LAMP-sized random recompute set
+                out, aux = A.attention_lamp(
+                    q, k, v, lamp_site.replace(rule="strict"), causal=causal,
+                    window=window, random_key=jax.random.PRNGKey(0))
+            else:
+                out, aux = A.attention_lamp(q, k, v, lamp_site, causal=causal,
+                                            window=window)
+            rate = aux.recompute_rate
+        else:
+            out = A.attention_reference(q, k, v, causal=causal, window=window)
+    elif attn_impl == "chunked":
+        if lamp_site.enabled:
+            site = lamp_site if lamp_site.rule == "relaxed" else lamp_site.replace(rule="relaxed")
+            out, aux = A.chunked_attention_lamp(q, k, v, site, causal=causal,
+                                                block=block, window=window,
+                                                onepass=site.onepass)
+            rate = aux.recompute_rate
+        else:
+            out = A.chunked_attention(q, k, v, causal=causal, block=block,
+                                      window=window)
+    else:
+        raise ValueError(f"unknown attn_impl {attn_impl!r}")
+
+    out = jnp.swapaxes(out, 1, 2).reshape(B, T, H * hd).astype(x.dtype)
+    return out @ p["wo"], rate
+
+
+def attention_decode_sublayer(cfg, p, x, *, cache_k, cache_v, length,
+                              lamp_site: LampSite, kv_cross: Optional[Tuple] = None,
+                              window: Optional[int] = None):
+    """Single-token decode. x: (B, 1, d); cache_k/v: (B, S, Hkv, hd).
+
+    Returns (out, new_cache_k, new_cache_v, recompute_rate). The new token's
+    k/v are written at position `length` (per sequence).
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = length[:, None]  # (B, 1) absolute position of the new token
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if kv_cross is None:
+        # scatter new k/v into the cache at `length`
+        bidx = jnp.arange(B)
+        cache_k = cache_k.at[bidx, length].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[bidx, length].set(v[:, 0].astype(cache_v.dtype))
+        use_k, use_v = cache_k, cache_v
+        eff_len = length + 1
+    else:
+        use_k, use_v = kv_cross
+        eff_len = jnp.full((B,), use_k.shape[1], jnp.int32)
+
+    qh = jnp.swapaxes(q, 1, 2)                                   # (B,H,1,hd)
+    window = window if window is not None else cfg.window
+
+    # sequence-parallel path: when the KV cache's seq axis is sharded over
+    # a >1 'model' mesh axis, run the shard_map distributed online softmax
+    # (grouped GQA, cache read once, O(B*H*hd) combine) instead of letting
+    # XLA all-gather the cache (EXPERIMENTS Sec Perf, hillclimb B).
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        names = getattr(am, "axis_names", ()) if am is not None else ()
+    except Exception:
+        names = ()
+    S = use_k.shape[1]
+    from repro.core.attention import baseline_mode
+    if ("model" in names and am.shape["model"] > 1
+            and S % am.shape["model"] == 0 and not baseline_mode()):
+        from repro.distributed.collectives import sp_decode_attention
+        out = sp_decode_attention(
+            am, qh, jnp.moveaxis(use_k, 2, 1), jnp.moveaxis(use_v, 2, 1),
+            eff_len, mu=lamp_site.mu if lamp_site.enabled else 23,
+            tau=lamp_site.tau, lamp=lamp_site.enabled, window=window)
+        rate = jnp.zeros((), jnp.float32)  # not tracked on the sp path
+    else:
+        kh = _repeat_kv(jnp.moveaxis(use_k, 2, 1), H // Hkv)      # (B,H,S,hd)
+        vh = _repeat_kv(jnp.moveaxis(use_v, 2, 1), H // Hkv)
+        out, aux = A.decode_attention_lamp(
+            qh, kh, vh, eff_len,
+            lamp_site if lamp_site.enabled else lamp_site.replace(enabled=False),
+            window=window)
+        rate = aux.recompute_rate
+    out = jnp.swapaxes(out, 1, 2).reshape(B, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], cache_k, cache_v, rate
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+def mlp_params(cfg, key, d_ff: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    gated = cfg.act in ("swiglu", "geglu")
+    wi_cols = 2 * ff if gated else ff
+    return {
+        "wi": (jax.random.normal(k1, (d, wi_cols)) * d ** -0.5).astype(dt),
+        "wo": (jax.random.normal(k2, (ff, d)) * ff ** -0.5).astype(dt),
+    }
+
+
+def mlp_apply(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    h = x @ p["wi"]
+    if cfg.act in ("swiglu", "geglu"):
+        ff = p["wo"].shape[0]
+        g, u = h[..., :ff], h[..., ff:]
+        act = jax.nn.silu(g.astype(jnp.float32)) if cfg.act == "swiglu" \
+            else jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+        h = (act * u.astype(jnp.float32)).astype(x.dtype)
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    elif cfg.act == "relu2":
+        r = jax.nn.relu(h.astype(jnp.float32))
+        h = (r * r).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown act {cfg.act!r}")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_params(cfg, key) -> Dict[str, jnp.ndarray]:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(dt)}
+    if cfg.pos == "learned":
+        p["pos"] = (jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model)) * 0.01).astype(dt)
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(ks[2], (cfg.d_model, cfg.vocab))
+                        * cfg.d_model ** -0.5).astype(dt)
+    return p
+
+
+def embed(cfg, p, tokens: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    from repro.distributed.sharding import shard_hint
+    x = p["tok"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.pos == "learned":
+        x = x + p["pos"][positions]
+    return shard_hint(x, "batch", None, None)
+
+
+def unembed(cfg, p, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        w = p["tok"].T
+    else:
+        w = p["unembed"]
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32))

@@ -1,0 +1,274 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+per-channel decay. Implements time-mix (wkv recurrence) + channel-mix (relu^2)
+blocks with token-shift and LoRA-style data-dependent interpolation.
+
+LAMP applicability (DESIGN.md Sec 6): RWKV has no token softmax, so the
+paper's KQ rule does not apply. Two LAMP sites remain: (a) the Sec 3.1
+activation rule -- note relu^2 has constant condition number 2 (phi' y / phi
+= 2 for y > 0), so LAMP selection there degenerates to all-or-nothing; (b)
+the final logits -> sampling-softmax composition, handled by the serving
+layer's `logits` site. The architecture is therefore implemented WITHOUT
+KQ-LAMP, as required by the assignment.
+
+Recurrence (per head h, head dim n=64):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          S in R^{n x n}
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as LY
+
+LORA_R = 32
+HEAD_DIM = 64
+
+
+def _n_heads(cfg) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def block_params(cfg, key) -> Dict[str, Any]:
+    d = cfg.d_model
+    dt = LY.dtype_of(cfg)
+    H = _n_heads(cfg)
+    ks = jax.random.split(key, 16)
+    sc = d ** -0.5
+
+    def lin(k, m, n, s=None):
+        return (jax.random.normal(k, (m, n)) * (s or m ** -0.5)).astype(dt)
+
+    return {
+        "ln1_w": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2_w": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        # time-mix
+        "tm_mu": (jax.random.uniform(ks[0], (5, d))).astype(dt),  # r,k,v,w,g
+        "tm_lora_down": lin(ks[1], d, LORA_R),
+        "tm_lora_up": (jax.random.normal(ks[2], (5, LORA_R, d)) * LORA_R ** -0.5).astype(dt),
+        "w_base": (jax.random.normal(ks[3], (d,)) * 0.5 - 6.0).astype(dt),
+        "w_lora_down": lin(ks[4], d, LORA_R),
+        "w_lora_up": lin(ks[5], LORA_R, d),
+        "u": (jax.random.normal(ks[6], (H, HEAD_DIM)) * 0.1).astype(dt),
+        "wr": lin(ks[7], d, d, sc), "wk": lin(ks[8], d, d, sc),
+        "wv": lin(ks[9], d, d, sc), "wg": lin(ks[10], d, d, sc),
+        "wo": lin(ks[11], d, d, sc),
+        "ln_x": jnp.ones((d,), dt),
+        # channel-mix
+        "cm_mu": (jax.random.uniform(ks[12], (2, d))).astype(dt),  # r,k
+        "cm_wk": lin(ks[13], d, cfg.d_ff, sc),
+        "cm_wv": lin(ks[14], cfg.d_ff, d, cfg.d_ff ** -0.5),
+        "cm_wr": lin(ks[15], d, d, sc),
+    }
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    k_emb, k_blocks = jax.random.split(key)
+    blocks = jax.vmap(lambda k: block_params(cfg, k))(
+        jax.random.split(k_blocks, cfg.n_layers))
+    d, dt = cfg.d_model, LY.dtype_of(cfg)
+    return {
+        "embed": LY.embed_params(cfg, k_emb),
+        "blocks": blocks,
+        "lnf_w": jnp.ones((d,), dt), "lnf_b": jnp.zeros((d,), dt),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent interpolation of Finch: 5 mixed streams (r,k,v,w,g)."""
+    base = x + (x_prev - x) * p["tm_mu"][:, None, None, :]          # (5,B,T,d)
+    lora = jnp.tanh(x @ p["tm_lora_down"])                          # (B,T,R)
+    dyn = jnp.einsum("btr,srd->sbtd", lora, p["tm_lora_up"])
+    mix = jnp.clip(p["tm_mu"][:, None, None, :] + dyn, 0.0, 1.0)
+    return x + (x_prev - x) * mix, base  # use dynamic mix; base unused
+
+
+def _wkv_scan(rf, kf, vf, w, u, S0):
+    """Paper-faithful per-timestep recurrence (baseline). (B,T,H,n) inputs."""
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs                                      # (B,H,n)
+        kv = k_t[..., :, None] * v_t[..., None, :]                   # (B,H,n,n)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, w))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return S, jnp.moveaxis(ys, 0, 1)
+
+
+def _wkv_chunked(rf, kf, vf, w, u, S0, chunk: int):
+    """Chunked WKV recurrence (beyond-paper perf path; EXPERIMENTS Sec Perf).
+
+    The state is carried once per `chunk` steps instead of every step
+    (HBM state traffic / chunk); intra-block interactions use explicit
+    pairwise decay coefficients exp(L_{t-1} - L_s) for s < t, which are
+    ALWAYS <= 1 (decay products over (s, t-1]), so the formulation is
+    numerically safe for any decay magnitude -- no 1/P division blowups.
+    Exactly equal to the step scan in exact arithmetic.
+    """
+    B, T, H, n = rf.shape
+    C = chunk
+    nb = -(-T // C)
+    pad = nb * C - T
+    if pad:
+        padw = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        rf = jnp.pad(rf, padw)
+        kf = jnp.pad(kf, padw)
+        vf = jnp.pad(vf, padw)
+        w = jnp.pad(w, padw, constant_values=1.0)   # decay 1 = no-op
+    from repro.distributed.sharding import shard_hint
+    blk = lambda t: shard_hint(jnp.moveaxis(t.reshape(B, nb, C, H, n), 1, 0),
+                               None, "batch", None, "model", None)
+    tri = jnp.tril(jnp.ones((C, C), bool), -1)       # strict lower: s < t
+
+    def block(S, xs):
+        rc, kc, vc, wc = xs                           # (B,C,H,n)
+        # clamp in log space: 1e-38 is subnormal and flushes to 0 on some
+        # backends, and log(0) = -inf poisons Lprev = L - logw with NaN.
+        logw = jnp.maximum(jnp.log(jnp.maximum(wc, 1e-30)), -60.0)
+        L = jnp.cumsum(logw, axis=1)                  # L_t = sum_{u<=t} log w_u
+        Lprev = L - logw                              # L_{t-1}
+        # inter-block: y_t += (r_t * exp(L_{t-1})) . S       [coeff <= 1]
+        y_inter = jnp.einsum("bthi,bhij->bthj", rc * jnp.exp(Lprev), S)
+        # intra-block: Att[t,s] = sum_i r_ti k_si exp(L_{t-1,i} - L_{s,i})
+        D = Lprev[:, :, None] - L[:, None, :]         # (B,C,C,H,n), <= 0 on tril
+        E = jnp.where(tri[None, :, :, None, None], jnp.exp(D), 0.0)
+        att = jnp.einsum("bthi,bshi,btshi->btsh", rc, kc, E)
+        y_intra = jnp.einsum("btsh,bshj->bthj", att, vc)
+        # current-step bonus: y_t += (r_t . (u * k_t)) v_t
+        coeff = jnp.einsum("bthi,hi,bthi->bth", rc, u, kc)
+        y = y_inter + y_intra + coeff[..., None] * vc
+        # state: S' = exp(L_C) * S + sum_s (exp(L_C - L_s) * k_s)^T v_s
+        k_eff = kc * jnp.exp(L[:, -1][:, None] - L)   # coeff <= 1
+        S = jnp.exp(L[:, -1])[..., None] * S + \
+            jnp.einsum("bshi,bshj->bhij", k_eff, vc)
+        return shard_hint(S, "batch", "model", None, None), y
+
+    # remat: recompute exp(D)/E in the backward pass instead of stacking a
+    # (nb, B, C, C, H, n) residual across blocks (EXPERIMENTS Sec Perf)
+    block = jax.checkpoint(block, prevent_cse=False)
+    S0 = shard_hint(S0, "batch", "model", None, None)
+    S, ys = jax.lax.scan(block, S0, (blk(rf), blk(kf), blk(vf), blk(w)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nb * C, H, n)
+    return S, y[:, :T]
+
+
+def time_mix(cfg, p, x, state, *, wkv_chunk: int = 0):
+    """x: (B,T,d); state: {'S': (B,H,n,n), 'x_prev': (B,d)}."""
+    B, T, d = x.shape
+    H = _n_heads(cfg)
+    n = HEAD_DIM
+    x_prev = jnp.concatenate([state["x_prev"][:, None, :], x[:, :-1]], axis=1)
+    mixed, _ = _ddlerp(p, x, x_prev)
+    xr, xk, xv, xw, xg = mixed
+    r = (xr @ p["wr"]).reshape(B, T, H, n)
+    k = (xk @ p["wk"]).reshape(B, T, H, n)
+    v = (xv @ p["wv"]).reshape(B, T, H, n)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    w_log = p["w_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ p["w_lora_down"]) @ p["w_lora_up"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, T, H, n)                # decay in (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    wf = w.astype(jnp.float32)
+    from repro.core.attention import baseline_mode
+    if baseline_mode():
+        wkv_chunk = 0
+    if wkv_chunk and T > 1:
+        S, ys = _wkv_chunked(rf, kf, vf, wf, u,
+                             state["S"].astype(jnp.float32), wkv_chunk)
+    else:
+        S, ys = _wkv_scan(rf, kf, vf, wf, u, state["S"].astype(jnp.float32))
+    y = ys.reshape(B, T, d)                                          # (B,T,d)
+    # per-head group norm
+    yh = y.reshape(B, T, H, n)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, T, d) * p["ln_x"].astype(jnp.float32)
+    out = ((y * g).astype(x.dtype)) @ p["wo"]
+    new_state = {"S": S.astype(state["S"].dtype), "x_prev": x[:, -1, :]}
+    return out, new_state
+
+
+def channel_mix(p, x, state):
+    x_prev = jnp.concatenate([state[:, None, :], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["cm_mu"][0][None, None, :]
+    xr = x + (x_prev - x) * p["cm_mu"][1][None, None, :]
+    k = jax.nn.relu((xk @ p["cm_wk"]).astype(jnp.float32))
+    k = (k * k).astype(x.dtype)
+    return jax.nn.sigmoid((xr @ p["cm_wr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ p["cm_wv"]), x[:, -1, :]
+
+
+def block_apply(cfg, p, x, state, *, wkv_chunk: int = 0):
+    h = LY.layer_norm(x, p["ln1_w"], p["ln1_b"])
+    a, tm_state = time_mix(cfg, p, h, {"S": state["S"], "x_prev": state["tm_x"]},
+                           wkv_chunk=wkv_chunk)
+    x = x + a
+    h = LY.layer_norm(x, p["ln2_w"], p["ln2_b"])
+    c, cm_x = channel_mix(p, h, state["cm_x"])
+    x = x + c
+    return x, {"S": tm_state["S"], "tm_x": tm_state["x_prev"], "cm_x": cm_x}
+
+
+def init_state(cfg, batch: int, dtype=jnp.float32) -> Dict[str, Any]:
+    H, n, d, L = _n_heads(cfg), HEAD_DIM, cfg.d_model, cfg.n_layers
+    dt = LY.dtype_of(cfg)
+    return {
+        "S": jnp.zeros((L, batch, H, n, n), dtype),
+        "tm_x": jnp.zeros((L, batch, d), dt),
+        "cm_x": jnp.zeros((L, batch, d), dt),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def forward(cfg, params, tokens, *, state=None, remat: bool = False,
+            wkv_chunk: int = 0, **_):
+    """Full-sequence forward. Returns (logits, new_state, aux)."""
+    B, S = tokens.shape
+    x = LY.embed(cfg, params["embed"], tokens, jnp.arange(S))
+    if state is None:
+        state = init_state(cfg, B)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, st_l = xs
+        y, st = block_apply(cfg, p_l, xc, st_l, wkv_chunk=wkv_chunk)
+        return y, st
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    st_in = {"S": state["S"], "tm_x": state["tm_x"], "cm_x": state["cm_x"]}
+    x, st_out = jax.lax.scan(body, x, (params["blocks"], st_in))
+    x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+    logits = LY.unembed(cfg, params["embed"], x)
+    new_state = {**st_out, "length": state["length"] + S}
+    return logits, new_state, {}
+
+
+def loss_fn(cfg, params, batch, *, remat: bool = True, wkv_chunk: int = 0, **_):
+    logits, _, aux = forward(cfg, params, batch["tokens"], remat=remat,
+                             wkv_chunk=wkv_chunk)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = batch["tokens"][:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, **aux}
+
+
+def prefill(cfg, params, tokens, state=None, *, wkv_chunk: int = 64, **_):
+    logits, state, _ = forward(cfg, params, tokens, state=state,
+                               wkv_chunk=wkv_chunk)
+    return logits[:, -1:], state
+
+
+def decode_step(cfg, params, state, tokens, **_):
+    """tokens (B, 1). Constant-memory decode: one recurrence step per layer."""
+    logits, state, _ = forward(cfg, params, tokens, state=state)
+    return logits, state

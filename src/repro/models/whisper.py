@@ -1,0 +1,229 @@
+"""Whisper-medium (arXiv:2212.04356): encoder-decoder speech transformer.
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` supplies
+precomputed frame embeddings (B, enc_seq=1500, d) directly to the encoder.
+Encoder: bidirectional self-attention. Decoder: causal self-attention +
+cross-attention to the encoder output. LayerNorm + GELU, learned positions,
+tied decoder embeddings (as in the released model).
+
+LAMP applies at three softmax sites: encoder self-attn, decoder self-attn,
+and cross-attn KQ products.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import LampSite
+
+from . import layers as LY
+
+
+def _enc_block_params(cfg, key):
+    ks = jax.random.split(key, 2)
+    d, dt = cfg.d_model, LY.dtype_of(cfg)
+    return {
+        "ln1_w": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2_w": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        "attn": LY.attn_params(cfg, ks[0]),
+        "mlp": LY.mlp_params(cfg, ks[1]),
+    }
+
+
+def _dec_block_params(cfg, key):
+    ks = jax.random.split(key, 3)
+    d, dt = cfg.d_model, LY.dtype_of(cfg)
+    return {
+        "ln1_w": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2_w": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        "ln3_w": jnp.ones((d,), dt), "ln3_b": jnp.zeros((d,), dt),
+        "attn": LY.attn_params(cfg, ks[0]),
+        "xattn": LY.attn_params(cfg, ks[1]),
+        "mlp": LY.mlp_params(cfg, ks[2]),
+    }
+
+
+def init_params(cfg, key) -> Dict[str, Any]:
+    k_emb, k_enc, k_dec, k_ep = jax.random.split(key, 4)
+    d, dt = cfg.d_model, LY.dtype_of(cfg)
+    enc = jax.vmap(lambda k: _enc_block_params(cfg, k))(
+        jax.random.split(k_enc, cfg.n_enc_layers))
+    dec = jax.vmap(lambda k: _dec_block_params(cfg, k))(
+        jax.random.split(k_dec, cfg.n_layers))
+    return {
+        "embed": LY.embed_params(cfg, k_emb),          # decoder tokens (+pos)
+        "enc_pos": (jax.random.normal(k_ep, (cfg.enc_seq, d)) * 0.01).astype(dt),
+        "enc_blocks": enc,
+        "dec_blocks": dec,
+        "enc_lnf_w": jnp.ones((d,), dt), "enc_lnf_b": jnp.zeros((d,), dt),
+        "lnf_w": jnp.ones((d,), dt), "lnf_b": jnp.zeros((d,), dt),
+    }
+
+
+def encode(cfg, params, frames: jnp.ndarray, *, use_lamp: bool = False,
+           attn_impl: str = "auto") -> jnp.ndarray:
+    """frames: (B, enc_seq, d) precomputed embeddings (frontend stub)."""
+    x = frames.astype(LY.dtype_of(cfg)) + params["enc_pos"][None]
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+
+    def body(carry, p_l):
+        xc = carry
+        h = LY.layer_norm(xc, p_l["ln1_w"], p_l["ln1_b"])
+        a, _ = LY.attention_sublayer(cfg, p_l["attn"], h, positions=positions,
+                                     lamp_site=site, causal=False,
+                                     attn_impl=attn_impl)
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln2_w"], p_l["ln2_b"])
+        return xc + LY.mlp_apply(cfg, p_l["mlp"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return LY.layer_norm(x, params["enc_lnf_w"], params["enc_lnf_b"])
+
+
+def _cross_kv(cfg, p_x, enc_out):
+    B, Te, _ = enc_out.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = (enc_out @ p_x["wk"]).reshape(B, Te, Hkv, hd)
+    v = (enc_out @ p_x["wv"]).reshape(B, Te, Hkv, hd)
+    return k, v
+
+
+def decode_full(cfg, params, tokens: jnp.ndarray, enc_out: jnp.ndarray, *,
+                use_lamp: bool = False, attn_impl: str = "auto",
+                remat: bool = False):
+    """Teacher-forced decoder over the full token sequence."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = LY.embed(cfg, params["embed"], tokens, positions)
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+
+    def body(carry, p_l):
+        xc = carry
+        h = LY.layer_norm(xc, p_l["ln1_w"], p_l["ln1_b"])
+        a, _ = LY.attention_sublayer(cfg, p_l["attn"], h, positions=positions,
+                                     lamp_site=site, causal=True,
+                                     attn_impl=attn_impl)
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln2_w"], p_l["ln2_b"])
+        kv = _cross_kv(cfg, p_l["xattn"], enc_out)
+        a, _ = LY.attention_sublayer(cfg, p_l["xattn"], h, positions=positions,
+                                     lamp_site=site, causal=False,
+                                     attn_impl=attn_impl, kv=kv)
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln3_w"], p_l["ln3_b"])
+        return xc + LY.mlp_apply(cfg, p_l["mlp"], h), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+    return LY.unembed(cfg, params["embed"], x)
+
+
+def forward(cfg, params, tokens, *, frames=None, use_lamp: bool = False,
+            attn_impl: str = "auto", remat: bool = False, **_):
+    enc_out = encode(cfg, params, frames, use_lamp=use_lamp, attn_impl=attn_impl)
+    logits = decode_full(cfg, params, tokens, enc_out, use_lamp=use_lamp,
+                         attn_impl=attn_impl, remat=remat)
+    return logits, {}
+
+
+def loss_fn(cfg, params, batch, *, use_lamp: bool = False, remat: bool = True,
+            attn_impl: str = "auto", **_):
+    logits, aux = forward(cfg, params, batch["tokens"], frames=batch["frames"],
+                          use_lamp=use_lamp, attn_impl=attn_impl, remat=remat)
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = batch["tokens"][:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "v": jnp.zeros((L, batch, max_len, Hkv, hd), dtype),
+        "xk": jnp.zeros((L, batch, cfg.enc_seq, Hkv, hd), dtype),
+        "xv": jnp.zeros((L, batch, cfg.enc_seq, Hkv, hd), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg, params, tokens, cache, *, frames=None, use_lamp: bool = True,
+            attn_impl: str = "auto", **_):
+    """Encode audio, precompute cross K/V per layer, prefill decoder cache."""
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, frames, use_lamp=use_lamp, attn_impl=attn_impl)
+    positions = jnp.arange(S)
+    x = LY.embed(cfg, params["embed"], tokens, positions)
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, ck, cv = xs
+        h = LY.layer_norm(xc, p_l["ln1_w"], p_l["ln1_b"])
+        q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), 0, axis=1)
+        a, _ = LY.attention_sublayer(cfg, p_l["attn"], h, positions=positions,
+                                     lamp_site=site, causal=True,
+                                     attn_impl=attn_impl)
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln2_w"], p_l["ln2_b"])
+        xk, xv = _cross_kv(cfg, p_l["xattn"], enc_out)
+        a, _ = LY.attention_sublayer(cfg, p_l["xattn"], h, positions=positions,
+                                     lamp_site=site, causal=False,
+                                     attn_impl=attn_impl, kv=(xk, xv))
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln3_w"], p_l["ln3_b"])
+        return xc + LY.mlp_apply(cfg, p_l["mlp"], h), (ck, cv, xk, xv)
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"]))
+    x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+    logits = LY.unembed(cfg, params["embed"], x[:, -1:])
+    new_cache = {"k": ks, "v": vs, "xk": xks.astype(cache["xk"].dtype),
+                 "xv": xvs.astype(cache["xv"].dtype),
+                 "length": jnp.full((B,), S, jnp.int32)}
+    return logits, new_cache
+
+
+def decode_step(cfg, params, cache, tokens, *, use_lamp: bool = True, **_):
+    B = tokens.shape[0]
+    length = cache["length"]
+    x = LY.embed(cfg, params["embed"], tokens, length[:, None])
+    site = cfg.lamp.kq if (use_lamp and cfg.lamp.kq.enabled) else LampSite(enabled=False)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, ck, cv, xk, xv = xs
+        h = LY.layer_norm(xc, p_l["ln1_w"], p_l["ln1_b"])
+        a, ck, cv, _ = LY.attention_decode_sublayer(
+            cfg, p_l["attn"], h, cache_k=ck, cache_v=cv, length=length,
+            lamp_site=site)
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln2_w"], p_l["ln2_b"])
+        a, _, _, _ = LY.attention_decode_sublayer(
+            cfg, p_l["xattn"], h, cache_k=xk, cache_v=xv, length=length,
+            lamp_site=site, kv_cross=(xk.astype(xc.dtype), xv.astype(xc.dtype)))
+        xc = xc + a
+        h = LY.layer_norm(xc, p_l["ln3_w"], p_l["ln3_b"])
+        return xc + LY.mlp_apply(cfg, p_l["mlp"], h), (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+    logits = LY.unembed(cfg, params["embed"], x)
+    new_cache = {**cache, "k": ks, "v": vs, "length": length + 1}
+    return logits, new_cache

@@ -1,0 +1,82 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two composable schemes (DESIGN.md: distributed-optimization tricks):
+
+  * top-k sparsification with error feedback (memory): each worker sends
+    only the largest-|g| fraction of every leaf; the residual is added back
+    into the next step's gradient (Stich et al. / Deep Gradient Compression).
+    Convergence-safe: the error-feedback memory guarantees all mass is
+    eventually applied.
+
+  * int8 quantization with per-leaf scale: linear quantization of the
+    (already sparse or dense) gradient to int8 for the wire, dequantized
+    after the all-reduce. 4x traffic cut vs f32 at <1% cosine distortion
+    for typical gradient distributions.
+
+These run *above* jit (pure functions over pytrees) so they compose with
+any train step; the quantized collective itself is exercised in
+distributed/collectives.py via shard_map.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(grads: Any, error: Any, frac: float) -> Tuple[Any, Any, Dict]:
+    """Keep the top `frac` of entries per leaf (by |g|), carry the rest in
+    the error-feedback memory. Returns (sparse_grads, new_error, stats)."""
+    if not 0.0 < frac <= 1.0:
+        raise ValueError("frac in (0, 1]")
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if frac >= 1.0 or g.size <= 16:
+            return gf, jnp.zeros_like(gf)
+        k = max(1, int(g.size * frac))
+        flat = jnp.abs(gf).reshape(-1)
+        thr = jax.lax.top_k(flat, k)[0][-1]
+        mask = jnp.abs(gf) >= thr
+        sent = jnp.where(mask, gf, 0.0)
+        return sent, gf - sent
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    sent = jax.tree.unflatten(td, [o[0] for o in outs])
+    new_err = jax.tree.unflatten(td, [o[1] for o in outs])
+    density = sum(float(jnp.mean((s != 0).astype(jnp.float32)) * s.size)
+                  for s in jax.tree.leaves(sent))
+    total = sum(s.size for s in jax.tree.leaves(sent))
+    return sent, new_err, {"density": density / max(total, 1)}
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(tree: Any) -> Tuple[Any, Any]:
+    """Per-leaf symmetric int8 quantization. Returns (q_tree, scales)."""
+    def one(g):
+        gf = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    flat, td = jax.tree.flatten(tree)
+    outs = [one(g) for g in flat]
+    return (jax.tree.unflatten(td, [o[0] for o in outs]),
+            jax.tree.unflatten(td, [o[1] for o in outs]))
+
+
+def dequantize_int8(q_tree: Any, scales: Any) -> Any:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, q_tree, scales)
+
+
+def compressed_wire_bytes(tree: Any, frac: float) -> int:
+    """Estimated wire bytes for topk(frac)+int8 vs dense f32 (for logging)."""
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    k = int(n * frac)
+    return k * (1 + 4)  # int8 payload + int32 index per surviving entry

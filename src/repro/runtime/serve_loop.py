@@ -1,0 +1,78 @@
+"""Batched serving loop with LAMP inference.
+
+prefill -> decode loop with temperature sampling, continuous logging of the
+LAMP recompute rate, and the optional `logits` LAMP site (the final
+unembed -> sampling-softmax composition, the serving analogue of the paper's
+KQ site -- used for the attention-free rwkv6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lamp as L
+from repro.core.mixed_matmul import dot_ps
+from repro.models import api
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+    use_lamp: bool = True
+    cache_len: int = 512
+
+
+def _sample(logits, key, temperature):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(cfg, params, batch: Dict[str, Any], serve: ServeConfig,
+             ) -> Dict[str, Any]:
+    """batch: prompt dict (tokens (B, S) + stub modality inputs)."""
+    B = batch["tokens"].shape[0]
+    cache = api.init_cache(cfg, B, serve.cache_len, jnp.float32)
+    t0 = time.monotonic()
+    logits, cache = api.prefill(cfg, params, batch, cache,
+                                use_lamp=serve.use_lamp)
+    prefill_s = time.monotonic() - t0
+    key = jax.random.PRNGKey(serve.seed)
+
+    decode = jax.jit(lambda p, c, t: api.decode_step(
+        cfg, p, c, t, use_lamp=serve.use_lamp))
+
+    toks = _sample(logits[:, -1], key, serve.temperature)[:, None]
+    out = [toks]
+    t0 = time.monotonic()
+    for i in range(serve.max_new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, toks)
+        toks = _sample(logits[:, -1], sub, serve.temperature)[:, None]
+        out.append(toks)
+    decode_s = time.monotonic() - t0
+    tokens = jnp.concatenate(out, axis=1)
+    return {
+        "tokens": tokens,
+        "prefill_s": prefill_s,
+        "decode_tok_per_s": B * (serve.max_new_tokens - 1) / max(decode_s, 1e-9),
+    }
+
+
+def lamp_logits_softmax(logits: jnp.ndarray, mu: int, tau: float):
+    """LAMP at the LM-head site: treat the unembed matmul's output as y and
+    the sampling softmax as f; rule (8) flags the entries whose rounding
+    error shifts the sampling distribution. Simulation helper used by the
+    rwkv6 serving benchmark (the arch has no attention softmax)."""
+    from repro.core.numerics import round_to_mantissa
+    y_low = round_to_mantissa(logits.astype(jnp.float32), mu)
+    mask = L.select_softmax_strict(y_low, tau)
+    y = jnp.where(mask, logits.astype(jnp.float32), y_low)
+    return L.masked_softmax(y), jnp.mean(mask.astype(jnp.float32))

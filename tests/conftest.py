@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device (NOT the 512-device dry-run world);
+# keep compilation deterministic and quiet.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,128 @@
+"""LAMP attention invariants: consistency across implementations, the
+paper's qualitative claims at unit-test scale, and serving-path agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    attention_lamp, attention_reference, chunked_attention,
+    chunked_attention_lamp, decode_attention_lamp, dot_ps,
+    lamp_matmul_softmax, masked_softmax)
+from repro.core.policy import LampSite
+
+
+def _qkv(T=64, D=32, B=2, H=2, scale=1.5, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, T, D)) * scale
+    k = jax.random.normal(ks[1], (B, H, T, D)) * scale
+    v = jax.random.normal(ks[2], (B, H, T, D))
+    return q, k, v
+
+
+def test_chunked_equals_reference():
+    q, k, v = _qkv()
+    for causal in (True, False):
+        ref = attention_reference(q, k, v, causal=causal)
+        out = chunked_attention(q, k, v, causal=causal, block=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_window_attention():
+    q, k, v = _qkv(T=48)
+    ref = attention_reference(q, k, v, causal=True, window=8)
+    out = chunked_attention(q, k, v, causal=True, window=8, block=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lamp_reduces_error_vs_uniform_low_precision():
+    """The paper's core claim at unit scale: LAMP-selected recompute beats
+    uniform low precision by a large factor at the same mu."""
+    q, k, v = _qkv(T=128, scale=2.0)
+    ref = attention_reference(q, k, v)
+    site_off = LampSite(enabled=True, mu=4, tau=1e9, rule="strict", granularity=1)
+    site_on = LampSite(enabled=True, mu=4, tau=0.03, rule="strict", granularity=1)
+    out_low, aux_low = attention_lamp(q, k, v, site_off)
+    out_lamp, aux_lamp = attention_lamp(q, k, v, site_on)
+    err_low = float(jnp.mean(jnp.abs(out_low - ref)))
+    err_lamp = float(jnp.mean(jnp.abs(out_lamp - ref)))
+    assert float(aux_lamp.recompute_rate) < 0.5
+    assert err_lamp < err_low / 3
+
+
+def test_random_recompute_is_useless():
+    """Paper App C.4: the same NUMBER of random recomputes gives ~no gain."""
+    q, k, v = _qkv(T=128, scale=2.0, seed=3)
+    ref = attention_reference(q, k, v)
+    site = LampSite(enabled=True, mu=4, tau=0.03, rule="strict", granularity=1)
+    out_lamp, aux = attention_lamp(q, k, v, site)
+    out_rand, aux_r = attention_lamp(q, k, v, site,
+                                     random_key=jax.random.PRNGKey(9))
+    assert abs(float(aux.n_selected) - float(aux_r.n_selected)) <= 1
+    err_lamp = float(jnp.mean(jnp.abs(out_lamp - ref)))
+    err_rand = float(jnp.mean(jnp.abs(out_rand - ref)))
+    assert err_lamp < err_rand / 2
+
+
+def test_online_lamp_matches_materialized_relaxed():
+    """Two-pass online relaxed LAMP == materialized relaxed LAMP."""
+    q, k, v = _qkv(T=64, seed=5)
+    site = LampSite(enabled=True, mu=5, tau=0.05, rule="relaxed", granularity=0)
+    out_m, aux_m = attention_lamp(q, k, v, site)
+    out_o, aux_o = chunked_attention_lamp(q, k, v, site, block=16)
+    np.testing.assert_allclose(np.asarray(out_o), np.asarray(out_m),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_onepass_is_conservative():
+    """One-pass running threshold selects a superset (recompute rate >=)."""
+    q, k, v = _qkv(T=64, seed=6)
+    site = LampSite(enabled=True, mu=5, tau=0.1, rule="relaxed", granularity=0)
+    _, aux2 = chunked_attention_lamp(q, k, v, site, block=8)
+    _, aux1 = chunked_attention_lamp(q, k, v, site, block=8, onepass=True)
+    assert float(aux1.recompute_rate) >= float(aux2.recompute_rate) - 1e-9
+
+
+def test_decode_matches_full_row():
+    q, k, v = _qkv(T=32, seed=7)
+    site = LampSite(enabled=False)
+    full = attention_reference(q, k, v, causal=True)
+    out, _ = decode_attention_lamp(q[:, :, -1:], k, v,
+                                   jnp.full((2,), 32), site)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, :, -1:]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_strict_rule_threshold_semantics():
+    """Rule (8): exactly the entries with 2 z (1-z) |y| > tau recompute."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (1, 32, 16)) * 1.5
+    b = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32)) * 1.5
+    z, y, mask = lamp_matmul_softmax(a, b, 5, 0.05, rule="strict")
+    y_low = dot_ps(a, b, 5, granularity=1)
+    zl = masked_softmax(y_low)
+    crit = 2 * zl * (1 - zl) * jnp.abs(y_low)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(crit > 0.05))
+
+
+def test_recompute_rate_decreases_with_tau():
+    q, k, v = _qkv(T=96, seed=8)
+    rates = []
+    for tau in (0.01, 0.05, 0.2, 0.8):
+        site = LampSite(enabled=True, mu=5, tau=tau, rule="strict", granularity=1)
+        _, aux = attention_lamp(q, k, v, site)
+        rates.append(float(aux.recompute_rate))
+    assert all(a >= b - 1e-9 for a, b in zip(rates, rates[1:]))
+
+
+def test_dot_ps_error_scales_with_granularity():
+    """c_g ~ ceil(K/g) u: per-FMA rounding error >> subtile >> cast-only."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 256))
+    b = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    exact = a @ b
+    def err(g):
+        return float(jnp.mean(jnp.abs(dot_ps(a, b, 7, granularity=g) - exact)))
+    e1, e32, e0 = err(1), err(32), err(0)
+    assert e1 > 2 * e32 > 2 * e0 * 0.99

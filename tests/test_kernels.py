@@ -1,0 +1,180 @@
+"""Per-kernel allclose vs the ref.py oracles, swept over shapes/dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+    return x.astype(dtype)
+
+
+# ------------------------------------------------------------- ps_matmul
+
+def _divblock(n, cap=32):
+    for c in (cap, 16, 8, 4):
+        if n % c == 0:
+            return c
+    return n
+
+
+@pytest.mark.parametrize("shape", [(32, 64, 16), (128, 128, 128), (64, 96, 48),
+                                   (16, 256, 32)])
+@pytest.mark.parametrize("mu", [4, 7, 23])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ps_matmul_sweep(shape, mu, dtype):
+    M, K, N = shape
+    a = _rand(0, (M, K), dtype)
+    b = _rand(1, (K, N), dtype)
+    bm, bn, bk = _divblock(M), _divblock(N), _divblock(K)
+    out = ops.ps_matmul(a, b, mu=mu, block_m=bm, block_n=bn, block_k=bk,
+                        interpret=True)
+    want = ref.ps_matmul_ref(a, b, mu, bk)
+    # mu=23 keeps full f32 accumulation: dot-product reassociation between
+    # the pallas dot and the jnp reference leaves ~1e-6 relative noise
+    tol = 1e-5 if mu == 23 else 1e-6
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_ps_matmul_mu23_exact():
+    a = _rand(2, (64, 64), jnp.float32)
+    b = _rand(3, (64, 64), jnp.float32)
+    out = ops.ps_matmul(a, b, mu=23, block_m=32, block_n=32, block_k=32,
+                        interpret=True)
+    want = jnp.matmul(a, b)
+    # blocked K accumulation reorders sums vs single-pass matmul: f32 noise
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- lamp_attention
+
+@pytest.mark.parametrize("T,D,bq,bk,sub", [(64, 32, 16, 16, 8),
+                                           (128, 64, 32, 64, 32),
+                                           (96, 16, 32, 32, 16)])
+@pytest.mark.parametrize("mu,tau", [(5, 0.05), (7, 0.2), (23, 0.05)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_lamp_flash_attention_sweep(T, D, bq, bk, sub, mu, tau, causal):
+    B, H = 1, 2
+    q = _rand(0, (B, H, T, D), jnp.float32, 1.5)
+    k = _rand(1, (B, H, T, D), jnp.float32, 1.5)
+    v = _rand(2, (B, H, T, D), jnp.float32)
+    kw = dict(mu=mu, tau=tau, causal=causal, block_q=bq, block_k=bk,
+              k_subtile=sub)
+    out, nsel = ops.lamp_flash_attention(q, k, v, interpret=True, **kw)
+    want, nsel_ref = ref.lamp_flash_attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+    assert float(nsel) == float(nsel_ref)
+
+
+def test_lamp_flash_attention_bf16_inputs():
+    B, H, T, D = 1, 1, 64, 32
+    q = _rand(0, (B, H, T, D), jnp.bfloat16, 1.5)
+    k = _rand(1, (B, H, T, D), jnp.bfloat16, 1.5)
+    v = _rand(2, (B, H, T, D), jnp.bfloat16)
+    out, _ = ops.lamp_flash_attention(q, k, v, mu=7, tau=0.1, causal=True,
+                                      block_q=16, block_k=16, k_subtile=16,
+                                      interpret=True)
+    want, _ = ref.lamp_flash_attention_ref(q, k, v, mu=7, tau=0.1, causal=True,
+                                           block_q=16, block_k=16, k_subtile=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_lamp_flash_attention_vs_exact_at_mu23():
+    """mu=23, tau>=1-eps disables LAMP: kernel == plain attention."""
+    from repro.core.attention import attention_reference
+    B, H, T, D = 1, 2, 64, 32
+    q = _rand(3, (B, H, T, D), jnp.float32)
+    k = _rand(4, (B, H, T, D), jnp.float32)
+    v = _rand(5, (B, H, T, D), jnp.float32)
+    out, _ = ops.lamp_flash_attention(q, k, v, mu=23, tau=0.999, causal=True,
+                                      block_q=16, block_k=16, interpret=True)
+    want = attention_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------- flash_decode
+
+@pytest.mark.parametrize("S,D,bk,sub", [(128, 32, 32, 8), (256, 64, 64, 32),
+                                        (64, 16, 16, 16)])
+@pytest.mark.parametrize("mu,tau", [(5, 0.05), (23, 0.2)])
+def test_flash_decode_sweep(S, D, bk, sub, mu, tau):
+    B, H = 2, 3
+    q = _rand(0, (B, H, 1, D), jnp.float32, 1.5)
+    kc = _rand(1, (B, H, S, D), jnp.float32, 1.5)
+    vc = _rand(2, (B, H, S, D), jnp.float32)
+    length = jnp.array([S - 7, S])
+    out, nsel = ops.flash_decode(q, kc, vc, length, mu=mu, tau=tau,
+                                 block_k=bk, k_subtile=sub, interpret=True)
+    want, nsel_ref = ref.flash_decode_ref(q, kc, vc, length, mu=mu, tau=tau,
+                                          block_k=bk, k_subtile=sub)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-6)
+    assert float(nsel) == float(nsel_ref)
+
+
+def test_flash_decode_matches_core_decode():
+    """Kernel (two-pass exact rule 9) == core decode_attention_lamp with the
+    same cast-free granularity semantics at mu=23."""
+    from repro.core.attention import decode_attention_lamp
+    from repro.core.policy import LampSite
+    B, H, S, D = 2, 2, 64, 32
+    q = _rand(6, (B, H, 1, D), jnp.float32)
+    kc = _rand(7, (B, H, S, D), jnp.float32)
+    vc = _rand(8, (B, H, S, D), jnp.float32)
+    length = jnp.array([50, 64])
+    out, _ = ops.flash_decode(q, kc, vc, length, mu=23, tau=0.99,
+                              block_k=16, interpret=True)
+    want, _ = decode_attention_lamp(q, kc, vc, length,
+                                    LampSite(enabled=False))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 37, 128), (256, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = _rand(0, shape, dtype)
+    w = _rand(1, (shape[-1],), jnp.float32, 0.1)
+    out = ops.rmsnorm(x, w, block_rows=16, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2 if
+                               dtype == jnp.bfloat16 else 1e-6, atol=1e-6)
+
+
+# ----------------------------------------------- kernel <-> model-path cross
+
+def test_kernel_matches_model_attention_path():
+    """The Pallas lamp_attention kernel and the model's chunked-LAMP path
+    implement the same deployment semantics: one-pass relaxed rule (9),
+    cast-only PS(mu). With matching block sizes the outputs agree."""
+    from repro.core.attention import chunked_attention_lamp
+    from repro.core.policy import LampSite
+    B, H, T, D = 1, 2, 128, 32
+    q = _rand(10, (B, H, T, D), jnp.float32, 1.5)
+    k = _rand(11, (B, H, T, D), jnp.float32, 1.5)
+    v = _rand(12, (B, H, T, D), jnp.float32)
+    mu, tau, blk = 7, 0.05, 32
+    out_k, nsel_k = ops.lamp_flash_attention(
+        q, k, v, mu=mu, tau=tau, causal=True, block_q=blk, block_k=blk,
+        k_subtile=D, interpret=True)
+    site = LampSite(enabled=True, mu=mu, tau=tau, rule="relaxed",
+                    granularity=0)
+    out_m, aux = chunked_attention_lamp(q, k, v, site, causal=True,
+                                        block=blk, onepass=True, q_tiles=1)
+    # same selection count and matching outputs: k_subtile=D makes the
+    # kernel's subtile rounding == the model's cast-only rounding
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_m),
+                               rtol=2e-4, atol=2e-5)
+    assert float(nsel_k) == float(aux.n_selected)

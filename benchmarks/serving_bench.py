@@ -1,0 +1,118 @@
+"""Serving benchmark: continuous-batching engine vs the static-batch loop.
+
+Reports throughput, latency percentiles, KV-block utilization, and the LAMP
+overhead (lamp on vs off) for both serving modes on the same request set:
+
+  * static  -- `runtime.serve_loop.generate`: one fixed batch, dense
+               per-request KV cache sized to prompt+new, every request padded
+               to the longest prompt and decoded for the max new tokens.
+  * engine  -- `serving.LampEngine`: paged KV pool + continuous batching;
+               requests finish (and free blocks) as their own stop
+               conditions hit.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import api
+from repro.runtime.serve_loop import ServeConfig, generate
+from repro.serving import EngineConfig, LampEngine, SamplingParams
+
+
+def make_requests(rng, cfg, n, min_prompt=8, max_prompt=40, min_new=4,
+                  max_new=24):
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        new = int(rng.integers(min_new, max_new + 1))
+        reqs.append((rng.integers(0, cfg.vocab, size=plen).tolist(), new))
+    return reqs
+
+
+def bench_static(cfg, params, reqs, use_lamp):
+    """Static batch: pad everything to the worst case, one generate() call."""
+    max_prompt = max(len(p) for p, _ in reqs)
+    max_new = max(n for _, n in reqs)
+    tokens = np.zeros((len(reqs), max_prompt), np.int32)
+    for i, (p, _) in enumerate(reqs):
+        tokens[i, max_prompt - len(p):] = p   # right-align; crude but typical
+    serve = ServeConfig(max_new_tokens=max_new, use_lamp=use_lamp,
+                        cache_len=max_prompt + max_new + 8)
+    t0 = time.monotonic()
+    out = generate(cfg, params, {"tokens": jnp.asarray(tokens)}, serve)
+    jax.block_until_ready(out["tokens"])
+    wall = time.monotonic() - t0
+    useful = sum(n for _, n in reqs)
+    return {"wall_s": wall, "useful_tok_per_s": useful / wall,
+            "padded_tok_per_s": len(reqs) * max_new / wall}
+
+
+def bench_engine(cfg, params, reqs, use_lamp):
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, max_model_len=128, use_lamp=use_lamp))
+    t0 = time.monotonic()
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    outs = engine.run_to_completion()
+    wall = time.monotonic() - t0
+    lat = sorted(o.latency for o in outs)
+    s = engine.stats()
+    useful = sum(n for _, n in reqs)
+    return {"wall_s": wall, "useful_tok_per_s": useful / wall,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+            "kv_util_mean": s["kv_util_mean"],
+            "lamp_rate": s["lamp_recompute_rate"],
+            "preemptions": s["preemptions"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduce_cfg(get_config("gpt2"))
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(rng, cfg, args.requests)
+
+    print("name,us_per_call,derived")
+    results = {}
+    for mode in ("static", "engine"):
+        for use_lamp in (False, True):
+            fn = bench_static if mode == "static" else bench_engine
+            # warmup compiles, then measure
+            fn(cfg, params, reqs, use_lamp)
+            r = fn(cfg, params, reqs, use_lamp)
+            results[(mode, use_lamp)] = r
+            tag = f"serve_{mode}_{'lamp' if use_lamp else 'fp32'}"
+            derived = f"tok/s={r['useful_tok_per_s']:.1f}"
+            if mode == "engine":
+                derived += (f";p50={r['latency_p50_s']*1e3:.0f}ms"
+                            f";p99={r['latency_p99_s']*1e3:.0f}ms"
+                            f";kv_util={r['kv_util_mean']:.2f}"
+                            f";lamp_rate={r['lamp_rate']:.4f}")
+            print(f"{tag},{r['wall_s']*1e6:.0f},{derived}")
+
+    for mode in ("static", "engine"):
+        off = results[(mode, False)]["useful_tok_per_s"]
+        on = results[(mode, True)]["useful_tok_per_s"]
+        print(f"serve_{mode}_lamp_overhead,0,"
+              f"overhead={100.0 * (off - on) / off:.1f}%")
+    spd = (results[("engine", True)]["useful_tok_per_s"] /
+           results[("static", True)]["useful_tok_per_s"])
+    print(f"serve_engine_vs_static,0,speedup={spd:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Continuous-batching serving demo: the paged-KV LAMP engine.
+
+Feeds a burst of variable-length requests to `serving.LampEngine`, streams
+completions as they finish (not in arrival order -- short requests overtake
+long ones), and prints per-request LAMP recompute rates: the paper's
+telemetry, now observable per serving request.
+
+    PYTHONPATH=src python examples/serve_continuous.py [arch]
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import api
+from repro.serving import EngineConfig, LampEngine, SamplingParams
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "gpt2"
+    cfg = reduced(get_config(arch))
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, max_model_len=96, use_lamp=True))
+
+    rng = np.random.default_rng(7)
+    for i in range(8):
+        plen = int(rng.integers(4, 32))
+        new = int(rng.integers(4, 24))
+        engine.add_request(rng.integers(0, cfg.vocab, size=plen).tolist(),
+                           SamplingParams(max_new_tokens=new, seed=i,
+                                          temperature=0.7))
+
+    print(f"[demo] {arch}: 8 requests, pool "
+          f"{engine.pool.num_total}x{engine.pool.block_size} blocks")
+    while engine.has_unfinished():
+        for o in engine.step():
+            print(f"[demo] req {o.req_id} finished: {len(o.prompt)} prompt + "
+                  f"{len(o.tokens)} new tokens, "
+                  f"lamp recompute rate {o.lamp_recompute_rate:.4f}, "
+                  f"tokens: {o.tokens[:6]}...")
+    s = engine.stats()
+    print(f"[demo] {s['tokens_per_s']:.1f} tok/s over {s['steps']} steps "
+          f"({s['prefill_steps']} prefill/{s['decode_steps']} decode), "
+          f"kv util mean {s['kv_util_mean']:.2%}, "
+          f"aggregate lamp rate {s['lamp_recompute_rate']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -126,6 +126,12 @@ def rwkv6() -> ModelConfig:
 
 # --- GPT-2 family for the paper's own experiments (Sec 4, App C) -----------
 
+@register("gpt2")
+def gpt2() -> ModelConfig:
+    """Alias for the paper's default GPT-2 small setting."""
+    return gpt2_small().replace(name="gpt2")
+
+
 @register("gpt2-small")
 def gpt2_small() -> ModelConfig:
     return ModelConfig(

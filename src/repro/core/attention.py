@@ -92,11 +92,15 @@ def attention_reference(q, k, v, *, causal: bool = True, scale: Optional[float] 
 def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
                    scale: Optional[float] = None, window: Optional[int] = None,
                    offset: int = 0, random_key: Optional[jax.Array] = None,
-                   ) -> Tuple[jnp.ndarray, AttnAux]:
+                   reduce: bool = True) -> Tuple[jnp.ndarray, AttnAux]:
     """Materialized-softmax LAMP attention (the paper's benchmark setting).
 
     With `random_key`, runs the App C.4 control: the *number* of recomputed
     products matches the LAMP rule, but positions are chosen at random.
+
+    With `reduce=False`, `aux.n_selected` / `aux.n_valid` are (B, Tq) arrays
+    (summed over heads and keys) instead of scalars, so callers serving
+    multiple requests in one batch can attribute recompute work per row.
     """
     q, k, v = (jnp.asarray(t, jnp.float32) for t in (q, k, v))
     B, H, Tq, D = q.shape
@@ -132,10 +136,17 @@ def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
     z = L.masked_softmax(y, wb)
     out = jnp.einsum("bhqk,bhkd->bhqd", z, v)
 
-    n_sel = jnp.sum(mask.astype(jnp.float32))
-    n_valid = (jnp.sum(wb.astype(jnp.float32)) if wb is not None
-               else jnp.asarray(float(mask.size), jnp.float32))
-    aux = AttnAux(n_sel / jnp.maximum(n_valid, 1), n_sel, n_valid)
+    if reduce:
+        n_sel = jnp.sum(mask.astype(jnp.float32))
+        n_valid = (jnp.sum(wb.astype(jnp.float32)) if wb is not None
+                   else jnp.asarray(float(mask.size), jnp.float32))
+        rate = n_sel / jnp.maximum(n_valid, 1)
+    else:
+        n_sel = jnp.sum(mask.astype(jnp.float32), axis=(1, 3))
+        n_valid = (jnp.sum(wb.astype(jnp.float32), axis=(1, 3)) if wb is not None
+                   else jnp.full((B, Tq), float(H * Tk), jnp.float32))
+        rate = jnp.sum(n_sel) / jnp.maximum(jnp.sum(n_valid), 1)
+    aux = AttnAux(rate, n_sel, n_valid)
     return out, aux
 
 
@@ -345,13 +356,16 @@ def chunked_attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
 
 def decode_attention_lamp(q, k_cache, v_cache, length, site: LampSite,
                           *, scale: Optional[float] = None,
-                          window: Optional[int] = None,
+                          window: Optional[int] = None, reduce: bool = True,
                           ) -> Tuple[jnp.ndarray, AttnAux]:
     """Single-token decode: q (B, H, 1, D) against cache (B, H, S, D).
 
     `length` (B,) = number of valid cache entries per sequence. LAMP rule (9)
     on the single logit row is O(S) -- fully materializable, so decode gets
     the exact relaxed rule at negligible cost.
+
+    With `reduce=False`, aux counts are per-sequence (B,) arrays (summed over
+    heads) so the serving engine can report per-request recompute rates.
     """
     q = jnp.asarray(q, jnp.float32)
     B, H, Tq, D = q.shape
@@ -369,12 +383,17 @@ def decode_attention_lamp(q, k_cache, v_cache, length, site: LampSite,
                        row_lengths=jnp.broadcast_to(length[:, None, None], (B, H, Tq)))
         y_exact = jnp.matmul(qs, kt)
         y = jnp.where(mask, y_exact, y_low)
-        nsel = jnp.sum(mask)
     else:
         y = jnp.matmul(qs, kt)
-        nsel = jnp.zeros((), jnp.int32)
+        mask = jnp.zeros(y.shape, bool)
     z = L.masked_softmax(y, ok)
     out = jnp.einsum("bhqk,bhkd->bhqd", z, jnp.asarray(v_cache, jnp.float32))
-    n_valid = jnp.sum(ok) * H
-    aux = AttnAux(nsel / jnp.maximum(n_valid, 1), nsel, n_valid)
+    if reduce:
+        nsel = jnp.sum(mask.astype(jnp.float32))
+        n_valid = jnp.sum(ok.astype(jnp.float32)) * H
+    else:
+        nsel = jnp.sum(mask.astype(jnp.float32), axis=(1, 2, 3))
+        n_valid = jnp.sum(ok.astype(jnp.float32), axis=(1, 2, 3)) * H
+    rate = jnp.sum(nsel) / jnp.maximum(jnp.sum(n_valid), 1)
+    aux = AttnAux(rate, nsel, n_valid)
     return out, aux

@@ -1,56 +1,127 @@
-"""Serving launcher: batched LAMP inference demo.
+"""Serving launcher: continuous-batching LAMP engine under a synthetic
+Poisson request stream.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \
-        --batch 4 --prompt-len 32 --new-tokens 16
+    PYTHONPATH=src python -m repro.launch.serve --arch gpt2 --reduced \
+        --qps 8 --num-requests 32
+
+Requests arrive with exponential inter-arrival times at `--qps`, with
+prompt/output lengths drawn per request; the engine admits them into the
+paged KV pool, continuously batches prefill/decode, and reports throughput,
+latency percentiles, KV-block utilization, and the per-request/aggregate
+LAMP recompute rate.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, list_archs, reduced as reduce_cfg
-from repro.runtime.serve_loop import ServeConfig, generate
 from repro.models import api
+from repro.serving import EngineConfig, LampEngine, SamplingParams
+from repro.serving.engine import TEXT_FAMILIES
+
+
+def servable_archs():
+    """Archs the paged-KV engine can serve (see engine.TEXT_FAMILIES)."""
+    return [a for a in list_archs()
+            if get_config(a).family in TEXT_FAMILIES]
+
+
+def build_stream(rng: np.random.Generator, args, vocab: int):
+    """Synthetic Poisson stream: (arrival_s, prompt, sampling) per request."""
+    arrivals = np.cumsum(rng.exponential(1.0 / args.qps, args.num_requests))
+    reqs = []
+    for i in range(args.num_requests):
+        plen = int(rng.integers(args.min_prompt, args.max_prompt + 1))
+        new = int(rng.integers(args.min_new, args.max_new + 1))
+        prompt = rng.integers(0, vocab, size=plen).tolist()
+        sampling = SamplingParams(max_new_tokens=new,
+                                  temperature=args.temperature, seed=i)
+        reqs.append((float(arrivals[i]), prompt, sampling))
+    return reqs
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--arch", required=True, choices=servable_archs())
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--qps", type=float, default=8.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--num-requests", type=int, default=32)
+    ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--max-prompt", type=int, default=48)
+    ap.add_argument("--min-new", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="KV pool size in blocks (0 = auto)")
+    ap.add_argument("--max-model-len", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-lamp", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
-    key = jax.random.PRNGKey(0)
-    params = api.init_params(cfg, key)
-    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len),
-                                          0, cfg.vocab)}
-    if cfg.family == "whisper":
-        batch["frames"] = jax.random.normal(
-            key, (args.batch, cfg.enc_seq, cfg.d_model)) * 0.1
-    if cfg.family == "llava":
-        batch["image_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.n_patches, cfg.d_model)) * 0.1
+    params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    max_len = args.max_model_len or min(cfg.max_seq,
+                                        args.max_prompt + args.max_new + 8)
+    if args.min_prompt > args.max_prompt or args.min_new > args.max_new:
+        ap.error("--min-prompt/--min-new must not exceed --max-prompt/--max-new")
+    if args.max_prompt + args.max_new > max_len:
+        ap.error(f"--max-prompt + --max-new ({args.max_prompt + args.max_new}) "
+                 f"exceeds the model length budget {max_len}; raise "
+                 f"--max-model-len (<= cfg.max_seq {cfg.max_seq}) or shrink "
+                 f"the request sizes")
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=args.block_size, n_blocks=args.n_blocks,
+        max_model_len=max_len, use_lamp=not args.no_lamp))
 
-    serve = ServeConfig(max_new_tokens=args.new_tokens,
-                        temperature=args.temperature,
-                        use_lamp=not args.no_lamp,
-                        cache_len=args.prompt_len + args.new_tokens
-                        + cfg.n_patches + cfg.n_meta_tokens + 8)
-    out = generate(cfg, params, batch, serve)
-    print(f"[serve] arch={cfg.name} lamp={not args.no_lamp}")
-    print(f"[serve] prefill {out['prefill_s']*1e3:.0f}ms, "
-          f"decode {out['decode_tok_per_s']:.1f} tok/s")
-    print(f"[serve] sample tokens: {out['tokens'][0][:16].tolist()}")
+    rng = np.random.default_rng(args.seed)
+    stream = build_stream(rng, args, cfg.vocab)
+    print(f"[serve] arch={cfg.name} lamp={not args.no_lamp} "
+          f"qps={args.qps} requests={args.num_requests} "
+          f"pool={engine.pool.num_total}x{engine.pool.block_size} blocks")
+
+    t0 = time.monotonic()
+    i, outputs = 0, []
+    while i < len(stream) or engine.has_unfinished():
+        now = time.monotonic() - t0
+        while i < len(stream) and stream[i][0] <= now:
+            arr, prompt, sampling = stream[i]
+            engine.add_request(prompt, sampling, arrival_time=t0 + arr)
+            i += 1
+        done = engine.step()
+        outputs.extend(done)
+        for o in done:
+            print(f"[serve]   req {o.req_id:>3d} done: prompt={len(o.prompt)} "
+                  f"new={len(o.tokens)} latency={o.latency*1e3:7.1f}ms "
+                  f"ttft={o.ttft*1e3:7.1f}ms preempt={o.num_preemptions} "
+                  f"lamp_rate={o.lamp_recompute_rate:.4f}")
+        if not engine.has_unfinished() and i < len(stream):
+            time.sleep(max(0.0, stream[i][0] - (time.monotonic() - t0)))
+
+    s = engine.stats()
+    mean_rate = (np.mean([o.lamp_recompute_rate for o in outputs])
+                 if outputs else 0.0)
+    print(f"[serve] finished {s['num_finished']}/{args.num_requests} "
+          f"in {s['elapsed_s']:.2f}s "
+          f"({s['prefill_steps']} prefill / {s['decode_steps']} decode steps, "
+          f"{s['preemptions']} preemptions)")
+    print(f"[serve] throughput {s['tokens_per_s']:.1f} tok/s, "
+          f"{s['requests_per_s']:.2f} req/s")
+    print(f"[serve] latency p50 {s['latency_p50_s']*1e3:.0f}ms  "
+          f"p99 {s['latency_p99_s']*1e3:.0f}ms  "
+          f"ttft p50 {s['ttft_p50_s']*1e3:.0f}ms")
+    print(f"[serve] kv-block utilization mean {s['kv_util_mean']:.2%} "
+          f"peak {s['kv_util_peak']:.2%}")
+    print(f"[serve] LAMP recompute rate: aggregate "
+          f"{s['lamp_recompute_rate']:.4f}, per-request mean {mean_rate:.4f}")
 
 
 if __name__ == "__main__":

@@ -242,6 +242,48 @@ def attention_decode_sublayer(cfg, p, x, *, cache_k, cache_v, length,
     return out @ p["wo"], cache_k, cache_v, rate
 
 
+def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
+                                    block_tables, lengths,
+                                    lamp_site: LampSite,
+                                    window: Optional[int] = None):
+    """Single-token decode against a paged KV arena (one layer).
+
+    x: (R, 1, d) hidden states for R slots of a continuous batch.
+    arena_k/v: (n_blocks, block_size, Hkv, hd) shared block arena.
+    block_tables: (R, n_max) int32; row r lists the arena blocks holding
+        sequence r's KV in position order (0 = reserved null block for
+        padding — never read thanks to the length mask, writes to it are
+        scratch).
+    lengths: (R,) tokens already cached; the new token's k/v are written at
+        absolute position `lengths[r]`, i.e. block `block_tables[r, len//bs]`
+        offset `len % bs`.
+
+    Gather-based paged attention: the per-sequence view reshapes the gathered
+    blocks so gathered flat index t == absolute position t, which makes the
+    computation bit-identical to the dense-cache path for valid positions.
+    Returns (out, arena_k, arena_v, n_selected (R,), n_valid (R,)).
+    """
+    R = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    bs = arena_k.shape[1]
+    q, k, v = _project_qkv(cfg, p, x, lengths[:, None])
+    ridx = jnp.arange(R)
+    blk = block_tables[ridx, lengths // bs]
+    off = lengths % bs
+    arena_k = arena_k.at[blk, off].set(k[:, 0].astype(arena_k.dtype))
+    arena_v = arena_v.at[blk, off].set(v[:, 0].astype(arena_v.dtype))
+    ks = arena_k[block_tables].reshape(R, -1, Hkv, hd)
+    vs = arena_v[block_tables].reshape(R, -1, Hkv, hd)
+    qh = jnp.swapaxes(q, 1, 2)                                # (R,H,1,hd)
+    kh = _repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)         # (R,H,S,hd)
+    vh = _repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
+    window = window if window is not None else cfg.window
+    out, aux = A.decode_attention_lamp(qh, kh, vh, lengths + 1, lamp_site,
+                                       window=window, reduce=False)
+    out = jnp.swapaxes(out, 1, 2).reshape(R, 1, H * hd).astype(x.dtype)
+    return out @ p["wo"], arena_k, arena_v, aux.n_selected, aux.n_valid
+
+
 # ---------------------------------------------------------------------------
 # MLP variants
 # ---------------------------------------------------------------------------

@@ -292,3 +292,148 @@ def decode_step(cfg, params, cache: Dict[str, Any], tokens: jnp.ndarray, *,
     logits = LY.unembed(cfg, params["embed"], x)
     new_cache = {"k": ks, "v": vs, "length": length + 1}
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache serving (block tables over a shared arena)
+# ---------------------------------------------------------------------------
+#
+# Layout: one arena per layer, (L, n_blocks, block_size, Hkv, hd). A sequence
+# owns an ordered list of blocks; flat index t within the gathered view of a
+# row's block table == absolute token position t, so attention semantics are
+# identical to the dense cache (padded tail masked by `lengths`). Block 0 is
+# reserved as a null/scratch block: block-table padding points at it and
+# padded slots write into it.
+
+def _serving_site(site: LampSite) -> LampSite:
+    """The App C.4 'random' control arm needs a resampled key per call and is
+    a benchmark-only configuration; serving maps it to the strict rule."""
+    if site.enabled and site.rule == "random":
+        return site.replace(rule="strict")
+    return site
+
+
+def init_paged_cache(cfg, n_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    L, Hkv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((L, n_blocks, block_size, Hkv, hd), dtype),
+        "v": jnp.zeros((L, n_blocks, block_size, Hkv, hd), dtype),
+    }
+
+
+def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
+                  block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
+                  use_lamp: bool = True, moe_groups: int = 1):
+    """Prefill a padded batch of prompts into the paged arena.
+
+    tokens: (B, S) left-aligned prompts padded to the bucket length S;
+    lengths: (B,) true prompt lengths; block_tables: (B, n_max). Padded rows
+    (lengths clamped to >= 1 by the caller) write only into the null block.
+
+    Returns (last_logits (B, 1, V), arena, (n_selected (B,), n_valid (B,)))
+    with last_logits taken at each row's final *valid* position and LAMP
+    counts attributed per request (padded query rows excluded).
+    """
+    B, S = tokens.shape
+    bs = arena["k"].shape[2]
+    positions = jnp.arange(S)
+    x = LY.embed(cfg, params["embed"], tokens, positions)
+    ctx = _ctx(cfg, positions, use_lamp, "full", moe_groups)
+    site = _serving_site(ctx.lamp_kq)
+    s_idx = jnp.arange(S)
+    valid_tok = s_idx[None, :] < lengths[:, None]                     # (B, S)
+    blk = jnp.where(valid_tok,
+                    jnp.take_along_axis(
+                        block_tables, jnp.broadcast_to(s_idx[None, :] // bs,
+                                                       (B, S)), axis=1),
+                    0)
+    off = jnp.broadcast_to(s_idx % bs, (B, S))
+    qmask = valid_tok.astype(jnp.float32)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, ck, cv = xs
+        h = LY.apply_norm(cfg, xc, p_l, "ln1")
+        q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
+        ck = ck.at[blk, off].set(k.astype(ck.dtype))
+        cv = cv.at[blk, off].set(v.astype(cv.dtype))
+        H, Hkv = cfg.n_heads, cfg.n_kv_heads
+        qh = jnp.swapaxes(q, 1, 2)
+        kh = LY._repeat_kv(jnp.swapaxes(k, 1, 2), H // Hkv)
+        vh = LY._repeat_kv(jnp.swapaxes(v, 1, 2), H // Hkv)
+        from repro.core import attention as CA
+        if site.enabled:
+            o, aux = CA.attention_lamp(qh, kh, vh, site, causal=True,
+                                       window=cfg.window, reduce=False)
+            nsel = jnp.sum(aux.n_selected * qmask, axis=1)
+            nval = jnp.sum(aux.n_valid * qmask, axis=1)
+        else:
+            o = CA.attention_reference(qh, kh, vh, causal=True,
+                                       window=cfg.window)
+            nsel = jnp.zeros((B,), jnp.float32)
+            nval = jnp.zeros((B,), jnp.float32)
+        o = jnp.swapaxes(o, 1, 2).reshape(xc.shape[0], S, -1).astype(xc.dtype)
+        xc = xc + o @ p_l["attn"]["wo"]
+        h = LY.apply_norm(cfg, xc, p_l, "ln2")
+        if cfg.family == "moe":
+            m, _ = MOE.moe_dispatch(cfg, p_l["moe"], h, lamp_site=ctx.lamp_router,
+                                    num_groups=ctx.moe_groups)
+        else:
+            m = LY.mlp_apply(cfg, p_l["mlp"], h)
+        return xc + m, (ck, cv, nsel, nval)
+
+    x, (ks, vs, nsel, nval) = jax.lax.scan(
+        body, x, (params["blocks"], arena["k"], arena["v"]))
+    if cfg.norm == "layernorm":
+        x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+    else:
+        x = LY.rms_norm(x, params["lnf_w"])
+    x_last = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
+    logits = LY.unembed(cfg, params["embed"], x_last)
+    return logits, {"k": ks, "v": vs}, (jnp.sum(nsel, axis=0),
+                                        jnp.sum(nval, axis=0))
+
+
+def paged_decode_step(cfg, params, arena: Dict[str, Any],
+                      block_tables: jnp.ndarray, lengths: jnp.ndarray,
+                      tokens: jnp.ndarray, *, use_lamp: bool = True,
+                      moe_dropless: bool = True, moe_groups: int = 1):
+    """One continuous-batch decode step over the paged arena.
+
+    tokens: (R, 1) last sampled token per slot; lengths: (R,) cache fill
+    (the new token's KV lands at position lengths[r]). Returns
+    (logits (R, 1, V), arena, (n_selected (R,), n_valid (R,))).
+    """
+    x = LY.embed(cfg, params["embed"], tokens, lengths[:, None])
+    pol = cfg.lamp
+    site = _serving_site(pol.kq if (use_lamp and pol.kq.enabled)
+                         else LampSite(enabled=False))
+    r_site = pol.router if (use_lamp and pol.router.enabled) \
+        else LampSite(enabled=False)
+
+    def body(carry, xs):
+        xc = carry
+        p_l, ck, cv = xs
+        h = LY.apply_norm(cfg, xc, p_l, "ln1")
+        a, ck, cv, nsel, nval = LY.paged_attention_decode_sublayer(
+            cfg, p_l["attn"], h, arena_k=ck, arena_v=cv,
+            block_tables=block_tables, lengths=lengths, lamp_site=site)
+        xc = xc + a
+        h = LY.apply_norm(cfg, xc, p_l, "ln2")
+        if cfg.family == "moe":
+            m, _ = MOE.moe_dispatch(cfg, p_l["moe"], h, lamp_site=r_site,
+                                    dropless=moe_dropless, num_groups=moe_groups)
+        else:
+            m = LY.mlp_apply(cfg, p_l["mlp"], h)
+        return xc + m, (ck, cv, nsel, nval)
+
+    x, (ks, vs, nsel, nval) = jax.lax.scan(
+        body, x, (params["blocks"], arena["k"], arena["v"]))
+    if cfg.norm == "layernorm":
+        x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+    else:
+        x = LY.rms_norm(x, params["lnf_w"])
+    logits = LY.unembed(cfg, params["embed"], x)
+    return logits, {"k": ks, "v": vs}, (jnp.sum(nsel, axis=0),
+                                        jnp.sum(nval, axis=0))

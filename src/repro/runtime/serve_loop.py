@@ -35,6 +35,20 @@ def _sample(logits, key, temperature):
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
+# jitted decode closures keyed on (cfg, use_lamp): repeated generate() calls
+# (and the serving engine's static-batch baseline) must not recompile.
+_DECODE_CACHE: Dict[Any, Any] = {}
+
+
+def decode_fn(cfg, use_lamp: bool):
+    fn = _DECODE_CACHE.get((cfg, use_lamp))
+    if fn is None:
+        fn = jax.jit(lambda p, c, t: api.decode_step(
+            cfg, p, c, t, use_lamp=use_lamp))
+        _DECODE_CACHE[(cfg, use_lamp)] = fn
+    return fn
+
+
 def generate(cfg, params, batch: Dict[str, Any], serve: ServeConfig,
              ) -> Dict[str, Any]:
     """batch: prompt dict (tokens (B, S) + stub modality inputs)."""
@@ -46,10 +60,10 @@ def generate(cfg, params, batch: Dict[str, Any], serve: ServeConfig,
     prefill_s = time.monotonic() - t0
     key = jax.random.PRNGKey(serve.seed)
 
-    decode = jax.jit(lambda p, c, t: api.decode_step(
-        cfg, p, c, t, use_lamp=serve.use_lamp))
+    decode = decode_fn(cfg, serve.use_lamp)
 
-    toks = _sample(logits[:, -1], key, serve.temperature)[:, None]
+    key, sub = jax.random.split(key)
+    toks = _sample(logits[:, -1], sub, serve.temperature)[:, None]
     out = [toks]
     t0 = time.monotonic()
     for i in range(serve.max_new_tokens - 1):

@@ -1,0 +1,23 @@
+"""Continuous-batching LAMP serving engine.
+
+vLLM-style serving architecture over the repro model stack:
+
+  request.py   -- Request/Sequence lifecycle (WAITING -> PREFILL -> DECODE ->
+                  FINISHED), per-request sampling params and LAMP stats
+  kv_pool.py   -- paged KV-cache pool: block tables over a shared
+                  (L, n_blocks, block_size, Hkv, hd) arena
+  scheduler.py -- continuous-batching scheduler: FCFS admission by free-block
+                  budget, preemption-by-eviction, bucketed step composition
+  engine.py    -- the step loop: add_request() / step() / stream outputs,
+                  cached jitted prefill+decode, per-request LAMP telemetry
+"""
+
+from .engine import EngineConfig, LampEngine, RequestOutput
+from .kv_pool import PagedKVPool
+from .request import SamplingParams, Sequence, SequenceStatus
+from .scheduler import Scheduler, StepPlan
+
+__all__ = [
+    "EngineConfig", "LampEngine", "RequestOutput", "PagedKVPool",
+    "SamplingParams", "Sequence", "SequenceStatus", "Scheduler", "StepPlan",
+]

@@ -1,0 +1,329 @@
+"""The continuous-batching LAMP serving engine.
+
+Step loop: `add_request()` enqueues, `step()` runs one scheduler-composed
+batch (a bucketed prefill or a bucketed decode) through cached jitted model
+functions over the paged KV pool, samples one token per sequence, and
+returns the requests that finished this step.
+
+Fixed-shape jit discipline: batch and sequence dims are padded to
+power-of-two buckets and the block-table width is a compile-time constant
+(blocks_for(max_model_len)), so the number of compiled shapes is bounded by
+O(log(max_batch) * log(max_prefill_len)) per (cfg, use_lamp).
+
+Sampling is inside the jitted step and keyed per request as
+fold_in(PRNGKey(seed), num_generated): a request's sample stream is
+deterministic regardless of how it was batched, bucketed, or preempted.
+
+LAMP telemetry: the paged attention paths return per-row selected/valid
+KQ-product counts; the engine accumulates them per request and in aggregate
+(the paper's recompute-rate metric, now observable per serving request).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+from .kv_pool import PagedKVPool
+from .request import SamplingParams, Sequence, SequenceStatus
+from .scheduler import Scheduler
+
+# families the paged-KV engine can serve (no per-request side inputs, no
+# state-space cache); launchers use this to filter the arch registry.
+TEXT_FAMILIES = ("dense", "moe", "gpt2")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    block_size: int = 16
+    n_blocks: int = 0               # 0 = auto-size from max_model_len
+    max_model_len: int = 0          # 0 = cfg.max_seq
+    max_prefill_batch: int = 8
+    max_prefill_tokens: int = 2048
+    max_decode_batch: int = 32
+    kv_dtype: str = "float32"
+    use_lamp: bool = True
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    req_id: int
+    prompt: List[int]
+    tokens: List[int]
+    finish_reason: str
+    latency: float
+    ttft: float
+    num_preemptions: int
+    lamp_selected: float
+    lamp_valid: float
+
+    @property
+    def lamp_recompute_rate(self) -> float:
+        return self.lamp_selected / self.lamp_valid if self.lamp_valid else 0.0
+
+
+def _bucket(n: int, cap: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap) if cap else b
+
+
+def _sample_rows(logits, seeds, counts, temps):
+    """Per-row sampling: greedy at temp<=0, Gumbel-max otherwise. The key is
+    derived from (request seed, tokens generated so far) only."""
+    def one(lg, s, c, t):
+        key = jax.random.fold_in(jax.random.PRNGKey(s), c)
+        g = jax.random.gumbel(key, lg.shape)
+        samp = jnp.argmax(lg / jnp.maximum(t, 1e-6) + g)
+        return jnp.where(t > 0, samp, jnp.argmax(lg))
+    return jax.vmap(one)(logits, seeds, counts, temps)
+
+
+# jitted step functions keyed on (cfg, use_lamp), shared across engine
+# instances so re-instantiation (benchmarks, tests) never recompiles. The KV
+# arenas are donated: the per-step .at[].set() updates alias the pool buffers
+# in place instead of copying the whole arena every token.
+_JIT_CACHE: Dict[Any, Any] = {}
+
+
+def _jitted_steps(cfg, use_lamp: bool):
+    key = (cfg, use_lamp)
+    fns = _JIT_CACHE.get(key)
+    if fns is None:
+        def _prefill(params, k, v, tokens, bt, lengths, seeds, counts, temps):
+            logits, arena, (nsel, nval) = transformer.paged_prefill(
+                cfg, params, tokens, {"k": k, "v": v}, bt, lengths,
+                use_lamp=use_lamp)
+            nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
+            return nxt, arena["k"], arena["v"], nsel, nval
+
+        def _decode(params, k, v, bt, lengths, tokens, seeds, counts, temps):
+            logits, arena, (nsel, nval) = transformer.paged_decode_step(
+                cfg, params, {"k": k, "v": v}, bt, lengths, tokens,
+                use_lamp=use_lamp)
+            nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
+            return nxt, arena["k"], arena["v"], nsel, nval
+
+        fns = (jax.jit(_prefill, donate_argnums=(1, 2)),
+               jax.jit(_decode, donate_argnums=(1, 2)))
+        _JIT_CACHE[key] = fns
+    return fns
+
+
+class LampEngine:
+    def __init__(self, cfg, params, econfig: EngineConfig = EngineConfig()):
+        if cfg.family not in TEXT_FAMILIES:
+            raise ValueError(
+                f"serving engine supports the paged-KV text families "
+                f"{TEXT_FAMILIES}, got {cfg.family!r} (state-space / "
+                f"modality-frontend families need their own cache layout; "
+                f"see ROADMAP open items)")
+        self.cfg = cfg
+        self.params = params
+        self.econfig = econfig
+        self.max_model_len = econfig.max_model_len or cfg.max_seq
+        bs = econfig.block_size
+        self.blocks_per_seq = -(-self.max_model_len // bs)
+        n_blocks = econfig.n_blocks or 4 * self.blocks_per_seq + 1
+        if n_blocks - 1 < self.blocks_per_seq:
+            raise ValueError(
+                f"n_blocks={n_blocks} (one reserved for the null block) "
+                f"cannot hold one max-length sequence: need "
+                f"{self.blocks_per_seq + 1} for max_model_len="
+                f"{self.max_model_len} at block_size={bs}")
+        self.pool = PagedKVPool(cfg, n_blocks=n_blocks, block_size=bs,
+                                dtype=jnp.dtype(econfig.kv_dtype))
+        self.scheduler = Scheduler(
+            self.pool, max_prefill_batch=econfig.max_prefill_batch,
+            max_prefill_tokens=econfig.max_prefill_tokens,
+            max_decode_batch=econfig.max_decode_batch)
+        self._next_id = 0
+        self._seqs: Dict[int, Sequence] = {}
+        self._finished: List[RequestOutput] = []
+        self._util_samples: List[float] = []
+        self._start: Optional[float] = None
+        self.total_steps = 0
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self.generated_tokens = 0
+        self.agg_lamp_selected = 0.0
+        self.agg_lamp_valid = 0.0
+
+        self._prefill_fn, self._decode_fn = _jitted_steps(cfg, econfig.use_lamp)
+
+    # -- request intake -----------------------------------------------------
+
+    def add_request(self, prompt: List[int],
+                    sampling: SamplingParams = SamplingParams(),
+                    arrival_time: Optional[float] = None) -> int:
+        if not prompt:
+            raise ValueError("empty prompt")
+        if sampling.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {sampling.max_new_tokens}")
+        if len(prompt) + sampling.max_new_tokens > self.max_model_len:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new_tokens"
+                f"({sampling.max_new_tokens}) exceeds max_model_len "
+                f"{self.max_model_len}")
+        req_id = self._next_id
+        self._next_id += 1
+        seq = Sequence(req_id, prompt, sampling,
+                       arrival_time if arrival_time is not None
+                       else time.monotonic())
+        self._seqs[req_id] = seq
+        self.scheduler.add(seq)
+        return req_id
+
+    def has_unfinished(self) -> bool:
+        return self.scheduler.has_work()
+
+    # -- the step loop ------------------------------------------------------
+
+    def step(self) -> List[RequestOutput]:
+        """Run one engine step; returns requests finished by this step."""
+        if self._start is None:
+            self._start = time.monotonic()
+        plan = self.scheduler.schedule()
+        if plan is None:
+            return []
+        if plan.kind == "prefill":
+            self._step_prefill(plan.seqs)
+            self.prefill_steps += 1
+        else:
+            self._step_decode(plan.seqs)
+            self.decode_steps += 1
+        self.total_steps += 1
+        self._util_samples.append(self.pool.utilization)
+        return self._collect_finished(plan.seqs)
+
+    def _batch_arrays(self, seqs: List[Sequence], Bb: int):
+        bt = np.zeros((Bb, self.blocks_per_seq), np.int32)
+        seeds = np.zeros((Bb,), np.int32)
+        counts = np.zeros((Bb,), np.int32)
+        temps = np.zeros((Bb,), np.float32)
+        for i, seq in enumerate(seqs):
+            bt[i, :len(seq.block_ids)] = seq.block_ids
+            seeds[i] = seq.sampling.seed
+            counts[i] = seq.num_generated
+            temps[i] = seq.sampling.temperature
+        return bt, seeds, counts, temps
+
+    def _step_prefill(self, seqs: List[Sequence]) -> None:
+        lens = [len(s.prefill_tokens()) for s in seqs]
+        Sb = _bucket(max(lens), 0)
+        Bb = _bucket(len(seqs), self.econfig.max_prefill_batch)
+        tokens = np.zeros((Bb, Sb), np.int32)
+        lengths = np.ones((Bb,), np.int32)   # pad rows: 1 token in null block
+        for i, seq in enumerate(seqs):
+            toks = seq.prefill_tokens()
+            tokens[i, :len(toks)] = toks
+            lengths[i] = len(toks)
+        bt, seeds, counts, temps = self._batch_arrays(seqs, Bb)
+        nxt, self.pool.k, self.pool.v, nsel, nval = self._prefill_fn(
+            self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
+            jnp.asarray(bt), jnp.asarray(lengths), jnp.asarray(seeds),
+            jnp.asarray(counts), jnp.asarray(temps))
+        nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
+                           np.asarray(nval))
+        now = time.monotonic()
+        for i, seq in enumerate(seqs):
+            seq.cache_len = lens[i]
+            seq.status = SequenceStatus.DECODE
+            seq.lamp.add(nsel[i], nval[i])
+            self.agg_lamp_selected += float(nsel[i])
+            self.agg_lamp_valid += float(nval[i])
+            seq.on_token(int(nxt[i]), now)
+            self.generated_tokens += 1
+
+    def _step_decode(self, seqs: List[Sequence]) -> None:
+        Rb = _bucket(len(seqs), self.econfig.max_decode_batch)
+        tokens = np.zeros((Rb, 1), np.int32)
+        lengths = np.zeros((Rb,), np.int32)  # pad rows write into null block
+        for i, seq in enumerate(seqs):
+            tokens[i, 0] = seq.last_token
+            lengths[i] = seq.cache_len
+        bt, seeds, counts, temps = self._batch_arrays(seqs, Rb)
+        nxt, self.pool.k, self.pool.v, nsel, nval = self._decode_fn(
+            self.params, self.pool.k, self.pool.v, jnp.asarray(bt),
+            jnp.asarray(lengths), jnp.asarray(tokens), jnp.asarray(seeds),
+            jnp.asarray(counts), jnp.asarray(temps))
+        nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
+                           np.asarray(nval))
+        now = time.monotonic()
+        for i, seq in enumerate(seqs):
+            seq.cache_len += 1
+            seq.lamp.add(nsel[i], nval[i])
+            self.agg_lamp_selected += float(nsel[i])
+            self.agg_lamp_valid += float(nval[i])
+            seq.on_token(int(nxt[i]), now)
+            self.generated_tokens += 1
+
+    def _collect_finished(self, seqs: List[Sequence]) -> List[RequestOutput]:
+        done = []
+        now = time.monotonic()
+        for seq in seqs:
+            reason = seq.should_stop()
+            if reason is None:
+                continue
+            seq.finish(reason, now)
+            self.scheduler.finish(seq)
+            out = RequestOutput(
+                req_id=seq.req_id, prompt=seq.prompt, tokens=seq.generated,
+                finish_reason=reason, latency=seq.latency(),
+                ttft=seq.ttft(), num_preemptions=seq.num_preemptions,
+                lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid)
+            self._finished.append(out)
+            done.append(out)
+        return done
+
+    # -- maintenance / metrics ---------------------------------------------
+
+    def defrag(self) -> None:
+        self.pool.defrag(sorted(self.scheduler.running,
+                                key=lambda s: s.arrival_time))
+
+    @property
+    def num_preemptions(self) -> int:
+        return self.scheduler.num_preemptions
+
+    def stats(self) -> Dict[str, Any]:
+        elapsed = (time.monotonic() - self._start) if self._start else 0.0
+        lat = [o.latency for o in self._finished]
+        ttft = [o.ttft for o in self._finished]
+        return {
+            "num_finished": len(self._finished),
+            "elapsed_s": elapsed,
+            "tokens_per_s": self.generated_tokens / elapsed if elapsed else 0.0,
+            "requests_per_s": len(self._finished) / elapsed if elapsed else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "steps": self.total_steps,
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "preemptions": self.num_preemptions,
+            "kv_util_mean": float(np.mean(self._util_samples))
+            if self._util_samples else 0.0,
+            "kv_util_peak": self.pool.peak_used / self.pool.num_total,
+            "lamp_recompute_rate": (self.agg_lamp_selected /
+                                    self.agg_lamp_valid
+                                    if self.agg_lamp_valid else 0.0),
+        }
+
+    def run_to_completion(self, max_steps: int = 100000) -> List[RequestOutput]:
+        """Drive step() until every queued request finishes."""
+        out: List[RequestOutput] = []
+        for _ in range(max_steps):
+            if not self.has_unfinished():
+                return out
+            out.extend(self.step())
+        raise RuntimeError("run_to_completion exceeded max_steps")

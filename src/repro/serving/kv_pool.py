@@ -1,0 +1,112 @@
+"""Paged KV-cache pool: block tables over a shared per-layer arena.
+
+The arena is a pair of device arrays shaped (L, n_blocks, block_size, Hkv,
+hd) (see `transformer.init_paged_cache`). The pool manages the *host-side*
+free list and hands out ordered block lists; sequences index the arena
+through (padded) block tables inside the jitted model functions.
+
+Block 0 is reserved as the null/scratch block: block-table padding points at
+it, and padded batch slots write into it. It is never allocated.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterable, List, Sequence as Seq
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+NULL_BLOCK = 0
+
+
+class PagedKVPool:
+    def __init__(self, cfg, *, n_blocks: int, block_size: int,
+                 dtype=jnp.float32):
+        if n_blocks < 2:
+            raise ValueError("need at least one allocatable block besides "
+                             "the reserved null block")
+        arena = transformer.init_paged_cache(cfg, n_blocks, block_size, dtype)
+        self.k = arena["k"]
+        self.v = arena["v"]
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free = deque(range(1, n_blocks))          # block 0 reserved
+        self.peak_used = 0
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def num_total(self) -> int:
+        """Allocatable blocks (excludes the null block)."""
+        return self.n_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_total - self.num_free
+
+    @property
+    def utilization(self) -> float:
+        return self.num_used / self.num_total
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    # -- alloc / free -------------------------------------------------------
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.num_free
+
+    def alloc(self, n: int) -> List[int]:
+        if n > self.num_free:
+            raise RuntimeError(f"KV pool exhausted: want {n} blocks, "
+                               f"{self.num_free} free")
+        out = [self._free.popleft() for _ in range(n)]
+        self.peak_used = max(self.peak_used, self.num_used)
+        return out
+
+    def free_blocks(self, ids: Iterable[int]) -> None:
+        for b in ids:
+            assert b != NULL_BLOCK, "freeing the reserved null block"
+            self._free.append(b)
+        assert self.num_free <= self.num_total, "double free"
+
+    # -- defrag -------------------------------------------------------------
+
+    def defrag(self, sequences: Seq) -> Dict[int, int]:
+        """Compact live blocks to the lowest arena indices.
+
+        Permutes the arena rows on device (one gather per array) and rewrites
+        each sequence's `block_ids` in place, so long-running churn cannot
+        scatter a sequence's blocks across the arena. Returns the old -> new
+        block id mapping.
+        """
+        mapping: Dict[int, int] = {}
+        nxt = 1
+        for seq in sequences:
+            for b in seq.block_ids:
+                assert b not in mapping, "block owned by two sequences"
+                mapping[b] = nxt
+                nxt += 1
+        if all(old == new for old, new in mapping.items()):
+            return mapping  # already compact; skip the device gather
+        # build a full permutation: new row i reads old row perm[i]
+        perm = np.empty(self.n_blocks, np.int32)
+        perm[0] = NULL_BLOCK
+        for old, new in mapping.items():
+            perm[new] = old
+        spare = [b for b in range(1, self.n_blocks) if b not in mapping]
+        perm[nxt:] = spare
+        pj = jnp.asarray(perm)
+        self.k = jnp.take(self.k, pj, axis=1)
+        self.v = jnp.take(self.v, pj, axis=1)
+        for seq in sequences:
+            seq.block_ids = [mapping[b] for b in seq.block_ids]
+        self._free = deque(range(nxt, self.n_blocks))
+        return mapping

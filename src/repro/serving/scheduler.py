@@ -1,0 +1,137 @@
+"""Continuous-batching scheduler.
+
+Policy (vLLM-v0 style, adapted to the fixed-shape jit constraint):
+
+  * Admission is FCFS from the waiting queue, gated by the free-block
+    budget: a prompt is admitted only if all its prefill blocks fit.
+  * Each step is either one prefill batch or one decode batch (fixed-shape,
+    padded to buckets so jit recompilation is bounded). Prefill is
+    prioritized, but never twice in a row while sequences are decoding --
+    this alternation plus FCFS preemption order makes the oldest request
+    always progress (no starvation).
+  * When the pool cannot cover the decode batch's next KV writes, running
+    sequences are preempted youngest-first (recompute-style eviction: blocks
+    freed, sequence requeued at the *front* of the waiting queue with its
+    generated tokens kept).
+
+Progress guarantee: the engine validates that the pool can hold at least one
+maximal sequence, so a lone running sequence can always allocate its next
+block and the oldest request can always eventually run to completion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from .kv_pool import PagedKVPool
+from .request import Sequence, SequenceStatus
+
+
+@dataclasses.dataclass
+class StepPlan:
+    kind: str                  # "prefill" | "decode"
+    seqs: List[Sequence]
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVPool, *, max_prefill_batch: int = 8,
+                 max_prefill_tokens: int = 2048, max_decode_batch: int = 32):
+        self.pool = pool
+        self.max_prefill_batch = max_prefill_batch
+        self.max_prefill_tokens = max_prefill_tokens
+        self.max_decode_batch = max_decode_batch
+        self.waiting: Deque[Sequence] = deque()
+        self.running: List[Sequence] = []
+        self.num_preemptions = 0
+        self._last_was_prefill = False
+
+    # -- queue ops ----------------------------------------------------------
+
+    def add(self, seq: Sequence) -> None:
+        self.waiting.append(seq)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.running)
+
+    def _preempt_youngest(self, keep: Optional[Sequence] = None) -> bool:
+        """Evict the youngest running sequence (never `keep`). Returns False
+        when there is nothing evictable."""
+        for victim in sorted(self.running, key=lambda s: s.arrival_time,
+                             reverse=True):
+            if victim is keep:
+                continue
+            self.running.remove(victim)
+            self.pool.free_blocks(victim.block_ids)
+            victim.preempt()
+            self.waiting.appendleft(victim)
+            self.num_preemptions += 1
+            return True
+        return False
+
+    # -- step composition ---------------------------------------------------
+
+    def _try_prefill(self) -> Optional[StepPlan]:
+        batch: List[Sequence] = []
+        budget = self.max_prefill_tokens
+        while self.waiting and len(batch) < self.max_prefill_batch:
+            seq = self.waiting[0]
+            n_tok = len(seq.prefill_tokens())
+            if batch and n_tok > budget:
+                break
+            need = self.pool.blocks_for(n_tok)
+            if not self.pool.can_alloc(need):
+                break
+            seq.block_ids = self.pool.alloc(need)
+            seq.cache_len = 0
+            seq.status = SequenceStatus.PREFILL
+            batch.append(self.waiting.popleft())
+            budget -= n_tok
+        if not batch:
+            return None
+        self.running.extend(batch)
+        return StepPlan("prefill", batch)
+
+    def _try_decode(self) -> Optional[StepPlan]:
+        while self.running:
+            batch = sorted(self.running,
+                           key=lambda s: s.arrival_time)[:self.max_decode_batch]
+            # blocks needed to write each sequence's next token KV
+            short = []
+            need = 0
+            for seq in batch:
+                want = self.pool.blocks_for(seq.cache_len + 1)
+                if want > len(seq.block_ids):
+                    short.append(seq)
+                    need += want - len(seq.block_ids)
+            if need <= self.pool.num_free:
+                for seq in short:
+                    seq.block_ids.extend(self.pool.alloc(1))
+                for seq in batch:
+                    seq.status = SequenceStatus.DECODE
+                return StepPlan("decode", batch)
+            if not self._preempt_youngest(keep=batch[0]):
+                raise RuntimeError(
+                    "KV pool too small for a single sequence; raise n_blocks")
+        return None
+
+    def schedule(self) -> Optional[StepPlan]:
+        decode_possible = bool(self.running)
+        prefer_prefill = bool(self.waiting) and not (
+            self._last_was_prefill and decode_possible)
+        plan = None
+        if prefer_prefill:
+            plan = self._try_prefill()
+        if plan is None and decode_possible:
+            plan = self._try_decode()
+        if plan is None and self.waiting and not prefer_prefill:
+            plan = self._try_prefill()
+        self._last_was_prefill = plan is not None and plan.kind == "prefill"
+        return plan
+
+    def finish(self, seq: Sequence) -> None:
+        """Release a finished sequence's resources."""
+        self.running.remove(seq)
+        self.pool.free_blocks(seq.block_ids)
+        seq.block_ids = []

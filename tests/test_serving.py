@@ -1,0 +1,287 @@
+"""Tests for the continuous-batching serving subsystem.
+
+Covers: paged-vs-dense cache equivalence (same logits/tokens), scheduler
+invariants under a randomized request stream (no block leaks, no starvation,
+preempted requests resume identically), pool defrag, and engine smoke with
+LAMP on/off.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import api, transformer
+from repro.serving import (EngineConfig, LampEngine, PagedKVPool,
+                           SamplingParams, Sequence)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduce_cfg(get_config("gpt2")).replace(vocab=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab, size=n).tolist()
+
+
+# ---------------------------------------------------------------- equivalence
+
+@pytest.mark.parametrize("use_lamp", [False, True])
+def test_paged_prefill_matches_dense(model, use_lamp):
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    lens = [5, 9]
+    prompts = [_prompt(rng, cfg, n) for n in lens]
+    bs = 4
+
+    dense = []
+    for p in prompts:
+        cache = api.init_cache(cfg, 1, 32, jnp.float32)
+        dl, _ = api.prefill(cfg, params, {"tokens": jnp.asarray([p])}, cache,
+                            use_lamp=use_lamp, attn_impl="full")
+        dense.append(np.asarray(dl)[0])
+
+    arena = transformer.init_paged_cache(cfg, 16, bs, jnp.float32)
+    S = 16
+    tokens = np.zeros((2, S), np.int32)
+    bt = np.zeros((2, 8), np.int32)
+    nxt = 1
+    for i, p in enumerate(prompts):
+        tokens[i, :len(p)] = p
+        nb = -(-len(p) // bs)
+        bt[i, :nb] = range(nxt, nxt + nb)
+        nxt += nb
+    pl, arena, (nsel, nval) = transformer.paged_prefill(
+        cfg, params, jnp.asarray(tokens), arena, jnp.asarray(bt),
+        jnp.asarray(lens, jnp.int32), use_lamp=use_lamp)
+    pl = np.asarray(pl)
+    for i in range(2):
+        np.testing.assert_allclose(pl[i], dense[i], atol=1e-5)
+    nsel, nval = np.asarray(nsel), np.asarray(nval)
+    if use_lamp:
+        # per-request valid counts: causal products over the true prompt only
+        for i, n in enumerate(lens):
+            expect = cfg.n_layers * cfg.n_heads * n * (n + 1) / 2
+            assert nval[i] == pytest.approx(expect)
+        assert (nsel > 0).all() and (nsel <= nval).all()
+    else:
+        assert (nsel == 0).all()
+
+
+@pytest.mark.parametrize("use_lamp", [False, True])
+def test_paged_decode_matches_dense(model, use_lamp):
+    cfg, params = model
+    rng = np.random.default_rng(2)
+    prompt = _prompt(rng, cfg, 9)
+    bs = 4
+
+    cache = api.init_cache(cfg, 1, 32, jnp.float32)
+    dl, cache = api.prefill(cfg, params, {"tokens": jnp.asarray([prompt])},
+                            cache, use_lamp=use_lamp, attn_impl="full")
+
+    arena = transformer.init_paged_cache(cfg, 16, bs, jnp.float32)
+    bt = np.zeros((1, 8), np.int32)
+    bt[0, :3] = [1, 2, 3]
+    tokens = np.zeros((1, 16), np.int32)
+    tokens[0, :9] = prompt
+    pl, arena, _ = transformer.paged_prefill(
+        cfg, params, jnp.asarray(tokens), arena, jnp.asarray(bt),
+        jnp.asarray([9], jnp.int32), use_lamp=use_lamp)
+
+    tok = jnp.argmax(dl[:, -1], axis=-1)[:, None]
+    length = 9
+    for _ in range(5):
+        dl, cache = api.decode_step(cfg, params, cache, tok,
+                                    use_lamp=use_lamp)
+        nb = -(-(length + 1) // bs)
+        if nb > np.sum(bt[0] > 0):
+            bt[0, nb - 1] = 3 + nb
+        pl, arena, _ = transformer.paged_decode_step(
+            cfg, params, arena, jnp.asarray(bt),
+            jnp.asarray([length], jnp.int32), tok, use_lamp=use_lamp)
+        np.testing.assert_allclose(np.asarray(pl), np.asarray(dl), atol=1e-5)
+        t_dense = int(jnp.argmax(dl[:, -1], axis=-1)[0])
+        t_paged = int(jnp.argmax(pl[:, -1], axis=-1)[0])
+        assert t_dense == t_paged
+        tok = jnp.asarray([[t_dense]])
+        length += 1
+
+
+def test_per_row_lamp_counts_match_scalar(model):
+    cfg, params = model
+    from repro.core import attention as A
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 3, 6, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 3, 6, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 3, 6, 8)), jnp.float32)
+    site = cfg.lamp.kq
+    o1, a1 = A.attention_lamp(q, k, v, site, causal=True)
+    o2, a2 = A.attention_lamp(q, k, v, site, causal=True, reduce=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    assert a2.n_selected.shape == (2, 6)
+    assert float(jnp.sum(a2.n_selected)) == pytest.approx(float(a1.n_selected))
+    assert float(jnp.sum(a2.n_valid)) == pytest.approx(float(a1.n_valid))
+
+    lengths = jnp.asarray([4, 6], jnp.int32)
+    o1, a1 = A.decode_attention_lamp(q[:, :, :1], k, v, lengths, site)
+    o2, a2 = A.decode_attention_lamp(q[:, :, :1], k, v, lengths, site,
+                                     reduce=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    assert a2.n_selected.shape == (2,)
+    assert float(jnp.sum(a2.n_selected)) == pytest.approx(float(a1.n_selected))
+    assert float(jnp.sum(a2.n_valid)) == pytest.approx(float(a1.n_valid))
+
+
+# ---------------------------------------------------------------- engine
+
+def _run_engine(cfg, params, requests, **ekw):
+    kw = dict(block_size=4, max_model_len=64, max_prefill_tokens=64,
+              max_prefill_batch=4, max_decode_batch=8)
+    kw.update(ekw)
+    engine = LampEngine(cfg, params, EngineConfig(**kw))
+    for prompt, sampling in requests:
+        engine.add_request(prompt, sampling)
+    outs = engine.run_to_completion()
+    return engine, {o.req_id: o for o in outs}
+
+
+@pytest.mark.parametrize("use_lamp", [False, True])
+def test_engine_smoke(model, use_lamp):
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    reqs = [(_prompt(rng, cfg, int(rng.integers(3, 20))),
+             SamplingParams(max_new_tokens=int(rng.integers(2, 8)), seed=i))
+            for i in range(6)]
+    engine, outs = _run_engine(cfg, params, reqs, use_lamp=use_lamp)
+    assert len(outs) == 6
+    for i, (prompt, sampling) in enumerate(reqs):
+        assert len(outs[i].tokens) == sampling.max_new_tokens
+        assert outs[i].finish_reason == "length"
+        assert outs[i].latency >= 0 and outs[i].ttft >= 0
+    s = engine.stats()
+    assert s["num_finished"] == 6
+    assert 0.0 <= s["kv_util_mean"] <= 1.0
+    if use_lamp:
+        assert s["lamp_recompute_rate"] > 0
+        assert all(o.lamp_recompute_rate > 0 for o in outs.values())
+    else:
+        assert s["lamp_recompute_rate"] == 0
+
+
+def test_stop_token_finishes_early(model):
+    cfg, params = model
+    # greedy decode with stop_token = whatever greedy produces first
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, cfg, 7)
+    _, outs = _run_engine(cfg, params,
+                          [(prompt, SamplingParams(max_new_tokens=8))])
+    first = outs[0].tokens[0]
+    _, outs2 = _run_engine(
+        cfg, params,
+        [(prompt, SamplingParams(max_new_tokens=8, stop_token=first))])
+    assert outs2[0].finish_reason == "stop_token"
+    assert outs2[0].tokens == [first]
+
+
+def test_scheduler_invariants_random_stream(model):
+    """Randomized stream through a deliberately tiny pool: every request
+    finishes (no starvation), blocks are all returned (no leak), and
+    preemption actually happened."""
+    cfg, params = model
+    rng = np.random.default_rng(6)
+    reqs = [(_prompt(rng, cfg, int(rng.integers(2, 30))),
+             SamplingParams(max_new_tokens=int(rng.integers(1, 12)), seed=i,
+                            temperature=float(rng.choice([0.0, 0.8]))))
+            for i in range(12)]
+    # pool barely above one max sequence -> heavy preemption churn
+    engine, outs = _run_engine(cfg, params, reqs, n_blocks=20)
+    assert len(outs) == 12
+    for i, (prompt, sampling) in enumerate(reqs):
+        assert len(outs[i].tokens) == sampling.max_new_tokens
+    assert engine.num_preemptions > 0
+    assert engine.pool.num_used == 0, "leaked KV blocks"
+    assert engine.pool.num_free == engine.pool.num_total
+    assert not engine.scheduler.running and not engine.scheduler.waiting
+
+
+def test_preempted_requests_resume_identically(model):
+    """Recompute-style preemption must not change any request's output
+    (greedy decode is deterministic; sampling keys depend only on
+    (seed, position))."""
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    reqs = [(_prompt(rng, cfg, int(rng.integers(4, 24))),
+             SamplingParams(max_new_tokens=10, seed=i,
+                            temperature=0.7 if i % 2 else 0.0))
+            for i in range(8)]
+    big, big_outs = _run_engine(cfg, params, reqs, n_blocks=200)
+    small, small_outs = _run_engine(cfg, params, reqs, n_blocks=20)
+    assert big.num_preemptions == 0
+    assert small.num_preemptions > 0
+    for i in range(len(reqs)):
+        assert big_outs[i].tokens == small_outs[i].tokens, f"req {i}"
+
+
+def test_kv_pool_alloc_free_defrag(model):
+    cfg, params = model
+    pool = PagedKVPool(cfg, n_blocks=10, block_size=4)
+    assert pool.num_total == 9
+    a = pool.alloc(3)
+    b = pool.alloc(2)
+    c = pool.alloc(2)
+    assert pool.num_free == 2 and pool.utilization == pytest.approx(7 / 9)
+    assert not pool.can_alloc(3)
+    pool.free_blocks(b)
+    # tag each live block's arena row with its id to track the permutation
+    ids = jnp.arange(pool.n_blocks, dtype=jnp.float32)
+    pool.k = jnp.ones_like(pool.k) * ids[None, :, None, None, None]
+    sa = Sequence(0, [1], SamplingParams(), 0.0)
+    sa.block_ids = list(a)
+    sc = Sequence(1, [1], SamplingParams(), 0.0)
+    sc.block_ids = list(c)
+    mapping = pool.defrag([sa, sc])
+    assert sorted(sa.block_ids + sc.block_ids) == list(range(1, 6))
+    for old, new in mapping.items():
+        assert float(pool.k[0, new, 0, 0, 0]) == old
+    assert pool.num_free == 4
+    pool.free_blocks(sa.block_ids + sc.block_ids)
+    assert pool.num_free == pool.num_total
+
+
+def test_engine_defrag_mid_run(model):
+    """defrag() during serving must not change subsequent outputs."""
+    cfg, params = model
+    rng = np.random.default_rng(8)
+    reqs = [(_prompt(rng, cfg, int(rng.integers(4, 16))),
+             SamplingParams(max_new_tokens=6, seed=i)) for i in range(4)]
+
+    def run(defrag_every):
+        engine = LampEngine(cfg, params, EngineConfig(
+            block_size=4, max_model_len=64, n_blocks=40))
+        for prompt, sampling in reqs:
+            engine.add_request(prompt, sampling)
+        outs = []
+        step = 0
+        while engine.has_unfinished():
+            outs.extend(engine.step())
+            step += 1
+            if defrag_every and step % defrag_every == 0:
+                engine.defrag()
+        return {o.req_id: o.tokens for o in outs}
+
+    assert run(0) == run(2)
+
+
+def test_decode_closure_cache_reuse(model):
+    cfg, params = model
+    from repro.runtime import serve_loop
+    f1 = serve_loop.decode_fn(cfg, True)
+    f2 = serve_loop.decode_fn(cfg, True)
+    f3 = serve_loop.decode_fn(cfg, False)
+    assert f1 is f2
+    assert f1 is not f3

@@ -1,4 +1,5 @@
-"""Serving benchmark: continuous-batching engine vs the static-batch loop.
+"""Serving benchmark: continuous-batching engine vs the static-batch loop,
+plus a shared-prefix stream for the prefix cache.
 
 Reports throughput, latency percentiles, KV-block utilization, and the LAMP
 overhead (lamp on vs off) for both serving modes on the same request set:
@@ -9,6 +10,13 @@ overhead (lamp on vs off) for both serving modes on the same request set:
   * engine  -- `serving.LampEngine`: paged KV pool + continuous batching;
                requests finish (and free blocks) as their own stop
                conditions hit.
+
+The shared-prefix section replays one request stream (groups of prompts
+opening with the same system prefix, arrivals staggered so later requests
+can hit the cache of earlier ones) through the engine with prefix caching +
+chunked prefill ON and OFF, checks the per-request outputs are
+token-identical, and reports the KV blocks allocated and prefill tokens
+computed by each.
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
 """
@@ -75,6 +83,73 @@ def bench_engine(cfg, params, reqs, use_lamp):
             "preemptions": s["preemptions"]}
 
 
+def make_shared_prefix_requests(rng, cfg, n, groups=4, prefix_len=32,
+                                min_suffix=4, max_suffix=16, new_tokens=8):
+    """Groups of prompts sharing a long per-group prefix (system prompts)."""
+    prefixes = [rng.integers(0, cfg.vocab, size=prefix_len).tolist()
+                for _ in range(groups)]
+    reqs = []
+    for i in range(n):
+        if i % 5 == 4 and reqs:
+            # exact duplicate of the previous prompt: the match is capped at
+            # prompt-1 tokens, exercising the mid-block copy-on-write path
+            reqs.append(reqs[-1])
+            continue
+        suffix = rng.integers(
+            0, cfg.vocab,
+            size=int(rng.integers(min_suffix, max_suffix + 1))).tolist()
+        reqs.append((prefixes[i % groups] + suffix, new_tokens))
+    return reqs
+
+
+def run_prefix_stream(cfg, params, reqs, *, prefix_cache, chunked_prefill,
+                      use_lamp=True):
+    """Replay the stream with arrivals staggered one prefill step apart, so
+    later arrivals can hit the prefix cache of earlier ones."""
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, max_model_len=128, max_prefill_tokens=24,
+        use_lamp=use_lamp, prefix_cache=prefix_cache,
+        chunked_prefill=chunked_prefill))
+    t0 = time.monotonic()
+    outs = []
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt,
+                           SamplingParams(max_new_tokens=new, seed=i))
+        outs.extend(engine.step())     # admit + run one step per arrival
+    outs.extend(engine.run_to_completion())
+    wall = time.monotonic() - t0
+    s = engine.stats()
+    return {"wall_s": wall,
+            "tokens": {o.req_id: o.tokens for o in outs},
+            "blocks_allocated": s["blocks_allocated"],
+            "blocks_saved": s["blocks_saved"],
+            "cache_hit_rate": s["cache_hit_rate"],
+            "prefill_tokens_run": s["prefill_tokens_run"],
+            "cow_copies": s["cow_copies"],
+            "prefill_chunks": s["prefill_chunks"]}
+
+
+def bench_prefix_cache(cfg, params, rng, n_requests):
+    reqs = make_shared_prefix_requests(rng, cfg, n_requests)
+    on = run_prefix_stream(cfg, params, reqs, prefix_cache=True,
+                           chunked_prefill=True)
+    off = run_prefix_stream(cfg, params, reqs, prefix_cache=False,
+                            chunked_prefill=False)
+    identical = on["tokens"] == off["tokens"]
+    saved = 1.0 - on["blocks_allocated"] / max(1, off["blocks_allocated"])
+    print(f"serve_prefix_cache_on,{on['wall_s']*1e6:.0f},"
+          f"blocks={on['blocks_allocated']}"
+          f";hit_rate={on['cache_hit_rate']:.2f}"
+          f";cow={on['cow_copies']};chunks={on['prefill_chunks']}")
+    print(f"serve_prefix_cache_off,{off['wall_s']*1e6:.0f},"
+          f"blocks={off['blocks_allocated']}")
+    print(f"serve_prefix_cache_savings,0,"
+          f"blocks_saved={saved:.1%};outputs_identical={identical}")
+    if not identical:
+        raise SystemExit("prefix-cache outputs diverged from baseline")
+    return saved
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -112,6 +187,8 @@ def main():
     spd = (results[("engine", True)]["useful_tok_per_s"] /
            results[("static", True)]["useful_tok_per_s"])
     print(f"serve_engine_vs_static,0,speedup={spd:.2f}x")
+
+    bench_prefix_cache(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

@@ -49,16 +49,29 @@ class AttnAux(NamedTuple):
     n_valid: jnp.ndarray          # scalar count
 
 
-def _causal_where(tq: int, tk: int, offset: int = 0,
+def _causal_where(tq: int, tk: int, offset=0,
                   window: Optional[int] = None) -> jnp.ndarray:
-    """(tq, tk) validity mask. `offset` = absolute position of query row 0
-    minus key row 0 (for caches / blocks). `window` = sliding-window size."""
-    qi = jnp.arange(tq)[:, None] + offset
+    """Validity mask. `offset` = absolute position of query row 0 minus key
+    row 0 (for caches / blocks); a scalar, or a (B,) array for batches whose
+    rows sit at different absolute positions (partial prefill windows) --
+    then the mask is (B, 1, tq, tk). `window` = sliding-window size."""
+    qi = jnp.arange(tq)[:, None] + _as_offset(offset)
     kj = jnp.arange(tk)[None, :]
     ok = kj <= qi
     if window is not None:
         ok &= kj > qi - window
     return ok
+
+
+def _as_offset(offset):
+    """Scalar offsets broadcast as-is; (B,) array offsets gain query/key and
+    batch/head dims so downstream masks become per-row."""
+    if isinstance(offset, (int, float)):
+        return offset
+    offset = jnp.asarray(offset)
+    if offset.ndim == 0:
+        return offset
+    return offset[:, None, None, None]  # (B,1,1,1) against (tq,1)/(1,tk)
 
 
 def _select(y: jnp.ndarray, site: LampSite, where, row_lengths=None) -> jnp.ndarray:
@@ -79,7 +92,7 @@ def _select(y: jnp.ndarray, site: LampSite, where, row_lengths=None) -> jnp.ndar
 
 
 def attention_reference(q, k, v, *, causal: bool = True, scale: Optional[float] = None,
-                        window: Optional[int] = None, offset: int = 0) -> jnp.ndarray:
+                        window: Optional[int] = None, offset=0) -> jnp.ndarray:
     """Uniform FP32 attention (paper's reference)."""
     q, k, v = (jnp.asarray(t, jnp.float32) for t in (q, k, v))
     scale = scale if scale is not None else q.shape[-1] ** -0.5
@@ -91,7 +104,7 @@ def attention_reference(q, k, v, *, causal: bool = True, scale: Optional[float] 
 
 def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
                    scale: Optional[float] = None, window: Optional[int] = None,
-                   offset: int = 0, random_key: Optional[jax.Array] = None,
+                   offset=0, random_key: Optional[jax.Array] = None,
                    reduce: bool = True) -> Tuple[jnp.ndarray, AttnAux]:
     """Materialized-softmax LAMP attention (the paper's benchmark setting).
 
@@ -101,6 +114,10 @@ def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
     With `reduce=False`, `aux.n_selected` / `aux.n_valid` are (B, Tq) arrays
     (summed over heads and keys) instead of scalars, so callers serving
     multiple requests in one batch can attribute recompute work per row.
+
+    `offset` may be a (B,) array: row b's queries sit at absolute positions
+    offset[b] .. offset[b] + Tq - 1 against keys at 0 .. Tk - 1 (the partial
+    prefill window of the paged serving path).
     """
     q, k, v = (jnp.asarray(t, jnp.float32) for t in (q, k, v))
     B, H, Tq, D = q.shape
@@ -113,9 +130,13 @@ def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
     y_low = dot_ps(q * scale, kt, site.mu, granularity=site.granularity)
 
     if causal:
-        row_lengths = jnp.clip(jnp.arange(Tq) + offset + 1, 0,
+        off_row = offset if isinstance(offset, (int, float)) \
+            else jnp.asarray(offset)[:, None]                     # (B, 1)
+        row_lengths = jnp.clip(jnp.arange(Tq) + off_row + 1, 0,
                                window if window is not None else Tk)
-        row_lengths = jnp.broadcast_to(row_lengths, (B, H, Tq))
+        row_lengths = jnp.broadcast_to(
+            row_lengths[..., None, :] if row_lengths.ndim == 2 else row_lengths,
+            (B, H, Tq))
     else:
         row_lengths = jnp.full((B, H, Tq), Tk)
 

@@ -32,13 +32,17 @@ def servable_archs():
 
 
 def build_stream(rng: np.random.Generator, args, vocab: int):
-    """Synthetic Poisson stream: (arrival_s, prompt, sampling) per request."""
+    """Synthetic Poisson stream: (arrival_s, prompt, sampling) per request.
+    With --shared-prefix N, every prompt opens with the same N tokens (a
+    shared system prompt), the traffic shape prefix caching exists for."""
     arrivals = np.cumsum(rng.exponential(1.0 / args.qps, args.num_requests))
+    shared = rng.integers(0, vocab, size=args.shared_prefix).tolist() \
+        if args.shared_prefix else []
     reqs = []
     for i in range(args.num_requests):
         plen = int(rng.integers(args.min_prompt, args.max_prompt + 1))
         new = int(rng.integers(args.min_new, args.max_new + 1))
-        prompt = rng.integers(0, vocab, size=plen).tolist()
+        prompt = shared + rng.integers(0, vocab, size=plen).tolist()
         sampling = SamplingParams(max_new_tokens=new,
                                   temperature=args.temperature, seed=i)
         reqs.append((float(arrivals[i]), prompt, sampling))
@@ -61,6 +65,19 @@ def main():
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="KV pool size in blocks (0 = auto)")
     ap.add_argument("--max-model-len", type=int, default=0)
+    ap.add_argument("--max-prefill-tokens", type=int, default=2048,
+                    help="prefill-step token budget = chunk size")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share prompt-prefix KV blocks across requests "
+                         "(copy-on-write)")
+    ap.add_argument("--chunked-prefill",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="prefill long prompts in max-prefill-tokens chunks "
+                         "so decode steps interleave")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common prefix of this many tokens to "
+                         "every prompt (prefix-cache traffic)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-lamp", action="store_true")
     args = ap.parse_args()
@@ -69,24 +86,30 @@ def main():
     if args.reduced:
         cfg = reduce_cfg(cfg)
     params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    longest = args.shared_prefix + args.max_prompt
     max_len = args.max_model_len or min(cfg.max_seq,
-                                        args.max_prompt + args.max_new + 8)
+                                        longest + args.max_new + 8)
     if args.min_prompt > args.max_prompt or args.min_new > args.max_new:
         ap.error("--min-prompt/--min-new must not exceed --max-prompt/--max-new")
-    if args.max_prompt + args.max_new > max_len:
-        ap.error(f"--max-prompt + --max-new ({args.max_prompt + args.max_new}) "
-                 f"exceeds the model length budget {max_len}; raise "
-                 f"--max-model-len (<= cfg.max_seq {cfg.max_seq}) or shrink "
-                 f"the request sizes")
+    if longest + args.max_new > max_len:
+        ap.error(f"shared prefix + max prompt + max new "
+                 f"({longest + args.max_new}) exceeds the model length "
+                 f"budget {max_len}; raise --max-model-len "
+                 f"(<= cfg.max_seq {cfg.max_seq}) or shrink the request sizes")
     engine = LampEngine(cfg, params, EngineConfig(
         block_size=args.block_size, n_blocks=args.n_blocks,
-        max_model_len=max_len, use_lamp=not args.no_lamp))
+        max_model_len=max_len, use_lamp=not args.no_lamp,
+        max_prefill_tokens=args.max_prefill_tokens,
+        prefix_cache=args.prefix_cache,
+        chunked_prefill=args.chunked_prefill))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
     print(f"[serve] arch={cfg.name} lamp={not args.no_lamp} "
           f"qps={args.qps} requests={args.num_requests} "
-          f"pool={engine.pool.num_total}x{engine.pool.block_size} blocks")
+          f"pool={engine.pool.num_total}x{engine.pool.block_size} blocks "
+          f"prefix_cache={args.prefix_cache} "
+          f"chunked_prefill={args.chunked_prefill}")
 
     t0 = time.monotonic()
     i, outputs = 0, []
@@ -102,6 +125,7 @@ def main():
             print(f"[serve]   req {o.req_id:>3d} done: prompt={len(o.prompt)} "
                   f"new={len(o.tokens)} latency={o.latency*1e3:7.1f}ms "
                   f"ttft={o.ttft*1e3:7.1f}ms preempt={o.num_preemptions} "
+                  f"cached={o.num_cached_tokens} "
                   f"lamp_rate={o.lamp_recompute_rate:.4f}")
         if not engine.has_unfinished() and i < len(stream):
             time.sleep(max(0.0, stream[i][0] - (time.monotonic() - t0)))
@@ -120,6 +144,12 @@ def main():
           f"ttft p50 {s['ttft_p50_s']*1e3:.0f}ms")
     print(f"[serve] kv-block utilization mean {s['kv_util_mean']:.2%} "
           f"peak {s['kv_util_peak']:.2%}")
+    print(f"[serve] prefix cache: hit rate {s['cache_hit_rate']:.2%} "
+          f"({s['cached_tokens']} cached / {s['prefill_tokens_run']} run "
+          f"tokens), {s['blocks_saved']} blocks saved / "
+          f"{s['blocks_allocated']} allocated, {s['cow_copies']} COW copies, "
+          f"{s['cache_evictions']} evictions, "
+          f"{s['prefill_chunks']} prefill chunks")
     print(f"[serve] LAMP recompute rate: aggregate "
           f"{s['lamp_recompute_rate']:.4f}, per-request mean {mean_rate:.4f}")
 

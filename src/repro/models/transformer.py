@@ -334,22 +334,61 @@ def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
     Returns (last_logits (B, 1, V), arena, (n_selected (B,), n_valid (B,)))
     with last_logits taken at each row's final *valid* position and LAMP
     counts attributed per request (padded query rows excluded).
+
+    Implemented as the degenerate window of `paged_prefill_window` (every row
+    starts at position 0), so the full-prompt and chunked/prefix-cached
+    prefill paths share one computation and stay token-identical.
     """
-    B, S = tokens.shape
+    starts = jnp.zeros_like(lengths)
+    return paged_prefill_window(cfg, params, tokens, arena, block_tables,
+                                starts, lengths, use_lamp=use_lamp,
+                                moe_groups=moe_groups)
+
+
+def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
+                         arena: Dict[str, Any], block_tables: jnp.ndarray,
+                         starts: jnp.ndarray, lengths: jnp.ndarray, *,
+                         use_lamp: bool = True, moe_groups: int = 1):
+    """Prefill a *window* of each prompt against an existing block table.
+
+    Row b runs tokens at absolute positions starts[b] .. starts[b] +
+    lengths[b] - 1; KV for positions < starts[b] must already be in the
+    arena through block_tables[b] (a shared prefix-cache hit or an earlier
+    chunk of the same prompt). Queries attend to the gathered arena view --
+    the cached prefix plus this window's just-written KV -- so per-position
+    outputs are identical to a single full prefill no matter how the prompt
+    is split into windows or how much of it came from the cache.
+
+    tokens: (B, W) window tokens, left-aligned, padded to the bucket width W;
+    starts: (B,) cached tokens per row (0 = fresh prompt); lengths: (B,)
+    valid tokens in this window (>= 1; padded rows use starts=0, lengths=1
+    and a null block table, writing only into the null block).
+
+    The constant gathered width (the full block-table span, as in decode) is
+    what buys the identity guarantee: attention over more keys than the
+    prompt needs costs extra FLOPs when max_model_len >> prompt, and the
+    planned Pallas paged-attention kernel (ROADMAP) is the place to win
+    that back without reintroducing shape-dependent numerics.
+
+    Returns (last_logits (B, 1, V), arena, (n_selected (B,), n_valid (B,)))
+    with last_logits at each row's final valid *window* position (only
+    meaningful for rows whose window completes the prompt) and LAMP counts
+    covering the KQ products actually computed in this window.
+    """
+    B, W = tokens.shape
+    n_max = block_tables.shape[1]
     bs = arena["k"].shape[2]
-    positions = jnp.arange(S)
+    positions = starts[:, None] + jnp.arange(W)[None, :]              # (B, W)
     x = LY.embed(cfg, params["embed"], tokens, positions)
     ctx = _ctx(cfg, positions, use_lamp, "full", moe_groups)
     site = _serving_site(ctx.lamp_kq)
-    s_idx = jnp.arange(S)
-    valid_tok = s_idx[None, :] < lengths[:, None]                     # (B, S)
+    valid_tok = jnp.arange(W)[None, :] < lengths[:, None]             # (B, W)
+    blk_idx = jnp.clip(positions // bs, 0, n_max - 1)
     blk = jnp.where(valid_tok,
-                    jnp.take_along_axis(
-                        block_tables, jnp.broadcast_to(s_idx[None, :] // bs,
-                                                       (B, S)), axis=1),
-                    0)
-    off = jnp.broadcast_to(s_idx % bs, (B, S))
+                    jnp.take_along_axis(block_tables, blk_idx, axis=1), 0)
+    off = jnp.where(valid_tok, positions % bs, 0)
     qmask = valid_tok.astype(jnp.float32)
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
     def body(carry, xs):
         xc = carry
@@ -358,22 +397,26 @@ def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
         q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
         ck = ck.at[blk, off].set(k.astype(ck.dtype))
         cv = cv.at[blk, off].set(v.astype(cv.dtype))
-        H, Hkv = cfg.n_heads, cfg.n_kv_heads
+        # gather the full per-row view (cached prefix + this window);
+        # gathered flat index t == absolute position t, as in decode
+        ks = ck[block_tables].reshape(B, n_max * bs, Hkv, hd)
+        vs = cv[block_tables].reshape(B, n_max * bs, Hkv, hd)
         qh = jnp.swapaxes(q, 1, 2)
-        kh = LY._repeat_kv(jnp.swapaxes(k, 1, 2), H // Hkv)
-        vh = LY._repeat_kv(jnp.swapaxes(v, 1, 2), H // Hkv)
+        kh = LY._repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)
+        vh = LY._repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
         from repro.core import attention as CA
         if site.enabled:
             o, aux = CA.attention_lamp(qh, kh, vh, site, causal=True,
-                                       window=cfg.window, reduce=False)
+                                       window=cfg.window, offset=starts,
+                                       reduce=False)
             nsel = jnp.sum(aux.n_selected * qmask, axis=1)
             nval = jnp.sum(aux.n_valid * qmask, axis=1)
         else:
             o = CA.attention_reference(qh, kh, vh, causal=True,
-                                       window=cfg.window)
+                                       window=cfg.window, offset=starts)
             nsel = jnp.zeros((B,), jnp.float32)
             nval = jnp.zeros((B,), jnp.float32)
-        o = jnp.swapaxes(o, 1, 2).reshape(xc.shape[0], S, -1).astype(xc.dtype)
+        o = jnp.swapaxes(o, 1, 2).reshape(xc.shape[0], W, -1).astype(xc.dtype)
         xc = xc + o @ p_l["attn"]["wo"]
         h = LY.apply_norm(cfg, xc, p_l, "ln2")
         if cfg.family == "moe":

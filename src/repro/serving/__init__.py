@@ -4,12 +4,15 @@ vLLM-style serving architecture over the repro model stack:
 
   request.py   -- Request/Sequence lifecycle (WAITING -> PREFILL -> DECODE ->
                   FINISHED), per-request sampling params and LAMP stats
-  kv_pool.py   -- paged KV-cache pool: block tables over a shared
-                  (L, n_blocks, block_size, Hkv, hd) arena
+  kv_pool.py   -- paged KV-cache pool: refcounted block tables over a shared
+                  (L, n_blocks, block_size, Hkv, hd) arena, chain-hashed
+                  prefix index with copy-on-write sharing
   scheduler.py -- continuous-batching scheduler: FCFS admission by free-block
-                  budget, preemption-by-eviction, bucketed step composition
+                  budget with prefix matching, chunked prefill windows,
+                  preemption-by-eviction, bucketed step composition
   engine.py    -- the step loop: add_request() / step() / stream outputs,
-                  cached jitted prefill+decode, per-request LAMP telemetry
+                  cached jitted (windowed) prefill+decode, per-request LAMP
+                  and prefix-cache telemetry
 """
 
 from .engine import EngineConfig, LampEngine, RequestOutput

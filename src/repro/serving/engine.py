@@ -10,6 +10,13 @@ power-of-two buckets and the block-table width is a compile-time constant
 (blocks_for(max_model_len)), so the number of compiled shapes is bounded by
 O(log(max_batch) * log(max_prefill_len)) per (cfg, use_lamp).
 
+Prefill runs through the *window* path (`transformer.paged_prefill_window`):
+each sequence runs the un-cached suffix of its prompt -- possibly one
+`max_prefill_tokens`-sized chunk of it -- at its absolute positions against
+the gathered arena view. Because every per-position computation is row-wise
+and the gathered key width is constant, outputs are token-identical whether
+a prompt is prefilled whole, in chunks, or on top of a shared prefix.
+
 Sampling is inside the jitted step and keyed per request as
 fold_in(PRNGKey(seed), num_generated): a request's sample stream is
 deterministic regardless of how it was batched, bucketed, or preempted.
@@ -46,10 +53,16 @@ class EngineConfig:
     n_blocks: int = 0               # 0 = auto-size from max_model_len
     max_model_len: int = 0          # 0 = cfg.max_seq
     max_prefill_batch: int = 8
-    max_prefill_tokens: int = 2048
+    max_prefill_tokens: int = 2048  # prefill-step token budget = chunk size
     max_decode_batch: int = 32
     kv_dtype: str = "float32"
     use_lamp: bool = True
+    # prefix caching: requests sharing a prompt prefix map their block
+    # tables onto the same arena rows (refcounted, copy-on-write)
+    prefix_cache: bool = True
+    # chunked prefill: long prompts prefill max_prefill_tokens per step so
+    # decode steps interleave and decode latency stays bounded
+    chunked_prefill: bool = True
 
 
 @dataclasses.dataclass
@@ -63,6 +76,7 @@ class RequestOutput:
     num_preemptions: int
     lamp_selected: float
     lamp_valid: float
+    num_cached_tokens: int = 0      # prompt tokens served from prefix cache
 
     @property
     def lamp_recompute_rate(self) -> float:
@@ -98,9 +112,10 @@ def _jitted_steps(cfg, use_lamp: bool):
     key = (cfg, use_lamp)
     fns = _JIT_CACHE.get(key)
     if fns is None:
-        def _prefill(params, k, v, tokens, bt, lengths, seeds, counts, temps):
-            logits, arena, (nsel, nval) = transformer.paged_prefill(
-                cfg, params, tokens, {"k": k, "v": v}, bt, lengths,
+        def _prefill(params, k, v, tokens, bt, starts, lengths, seeds,
+                     counts, temps):
+            logits, arena, (nsel, nval) = transformer.paged_prefill_window(
+                cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
                 use_lamp=use_lamp)
             nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
             return nxt, arena["k"], arena["v"], nsel, nval
@@ -126,6 +141,12 @@ class LampEngine:
                 f"{TEXT_FAMILIES}, got {cfg.family!r} (state-space / "
                 f"modality-frontend families need their own cache layout; "
                 f"see ROADMAP open items)")
+        if min(econfig.max_prefill_tokens, econfig.max_prefill_batch,
+               econfig.max_decode_batch) < 1:
+            raise ValueError(
+                "max_prefill_tokens, max_prefill_batch and max_decode_batch "
+                "must all be >= 1 (a zero prefill budget cannot make "
+                "progress)")
         self.cfg = cfg
         self.params = params
         self.econfig = econfig
@@ -140,11 +161,13 @@ class LampEngine:
                 f"{self.blocks_per_seq + 1} for max_model_len="
                 f"{self.max_model_len} at block_size={bs}")
         self.pool = PagedKVPool(cfg, n_blocks=n_blocks, block_size=bs,
-                                dtype=jnp.dtype(econfig.kv_dtype))
+                                dtype=jnp.dtype(econfig.kv_dtype),
+                                enable_prefix_cache=econfig.prefix_cache)
         self.scheduler = Scheduler(
             self.pool, max_prefill_batch=econfig.max_prefill_batch,
             max_prefill_tokens=econfig.max_prefill_tokens,
-            max_decode_batch=econfig.max_decode_batch)
+            max_decode_batch=econfig.max_decode_batch,
+            chunked_prefill=econfig.chunked_prefill)
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: List[RequestOutput] = []
@@ -153,6 +176,8 @@ class LampEngine:
         self.total_steps = 0
         self.prefill_steps = 0
         self.decode_steps = 0
+        self.prefill_chunks = 0         # partial windows (prompt continues)
+        self.prefill_tokens_run = 0     # prompt tokens actually computed
         self.generated_tokens = 0
         self.agg_lamp_selected = 0.0
         self.agg_lamp_valid = 0.0
@@ -196,7 +221,7 @@ class LampEngine:
         if plan is None:
             return []
         if plan.kind == "prefill":
-            self._step_prefill(plan.seqs)
+            self._step_prefill(plan.seqs, plan.windows)
             self.prefill_steps += 1
         else:
             self._step_decode(plan.seqs)
@@ -217,32 +242,50 @@ class LampEngine:
             temps[i] = seq.sampling.temperature
         return bt, seeds, counts, temps
 
-    def _step_prefill(self, seqs: List[Sequence]) -> None:
-        lens = [len(s.prefill_tokens()) for s in seqs]
-        Sb = _bucket(max(lens), 0)
+    def _step_prefill(self, seqs: List[Sequence],
+                      windows: List[int]) -> None:
+        """Run one prefill window per sequence: the whole remaining prompt,
+        or a `max_prefill_tokens`-bounded chunk of it. A sequence whose
+        window completes its prompt samples its first token and moves to
+        DECODE; otherwise it stays PREFILL with its cursor advanced."""
+        Wb = _bucket(max(windows), 0)
         Bb = _bucket(len(seqs), self.econfig.max_prefill_batch)
-        tokens = np.zeros((Bb, Sb), np.int32)
+        tokens = np.zeros((Bb, Wb), np.int32)
+        starts = np.zeros((Bb,), np.int32)
         lengths = np.ones((Bb,), np.int32)   # pad rows: 1 token in null block
-        for i, seq in enumerate(seqs):
-            toks = seq.prefill_tokens()
-            tokens[i, :len(toks)] = toks
-            lengths[i] = len(toks)
+        for i, (seq, w) in enumerate(zip(seqs, windows)):
+            cur = seq.prefill_cursor
+            tokens[i, :w] = seq.prefill_tokens()[cur:cur + w]
+            starts[i] = cur
+            lengths[i] = w
         bt, seeds, counts, temps = self._batch_arrays(seqs, Bb)
         nxt, self.pool.k, self.pool.v, nsel, nval = self._prefill_fn(
             self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
-            jnp.asarray(bt), jnp.asarray(lengths), jnp.asarray(seeds),
-            jnp.asarray(counts), jnp.asarray(temps))
+            jnp.asarray(bt), jnp.asarray(starts), jnp.asarray(lengths),
+            jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps))
         nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
                            np.asarray(nval))
         now = time.monotonic()
-        for i, seq in enumerate(seqs):
-            seq.cache_len = lens[i]
-            seq.status = SequenceStatus.DECODE
+        for i, (seq, w) in enumerate(zip(seqs, windows)):
+            seq.prefill_cursor += w
+            seq.cache_len = seq.prefill_cursor
+            self.prefill_tokens_run += w
             seq.lamp.add(nsel[i], nval[i])
             self.agg_lamp_selected += float(nsel[i])
             self.agg_lamp_valid += float(nval[i])
-            seq.on_token(int(nxt[i]), now)
-            self.generated_tokens += 1
+            if self.econfig.prefix_cache:
+                # the window's full blocks now hold real KV: make them
+                # matchable by later arrivals (and by our own resume); the
+                # admission-time chain hashes avoid rehashing per chunk
+                self.pool.register_prefix(seq.prefill_tokens(),
+                                          seq.block_ids, seq.cache_len,
+                                          hashes=seq.prefix_hashes)
+            if seq.prefill_remaining == 0:
+                seq.status = SequenceStatus.DECODE
+                seq.on_token(int(nxt[i]), now)
+                self.generated_tokens += 1
+            else:
+                self.prefill_chunks += 1
 
     def _step_decode(self, seqs: List[Sequence]) -> None:
         Rb = _bucket(len(seqs), self.econfig.max_decode_batch)
@@ -280,7 +323,8 @@ class LampEngine:
                 req_id=seq.req_id, prompt=seq.prompt, tokens=seq.generated,
                 finish_reason=reason, latency=seq.latency(),
                 ttft=seq.ttft(), num_preemptions=seq.num_preemptions,
-                lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid)
+                lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid,
+                num_cached_tokens=seq.num_cached_tokens)
             self._finished.append(out)
             done.append(out)
         return done
@@ -299,6 +343,7 @@ class LampEngine:
         elapsed = (time.monotonic() - self._start) if self._start else 0.0
         lat = [o.latency for o in self._finished]
         ttft = [o.ttft for o in self._finished]
+        cached = sum(s.num_cached_tokens for s in self._seqs.values())
         return {
             "num_finished": len(self._finished),
             "elapsed_s": elapsed,
@@ -310,7 +355,17 @@ class LampEngine:
             "steps": self.total_steps,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
             "preemptions": self.num_preemptions,
+            # prefix-cache telemetry
+            "blocks_allocated": self.pool.total_allocs,
+            "blocks_saved": self.pool.hit_blocks,
+            "cached_tokens": cached,
+            "prefill_tokens_run": self.prefill_tokens_run,
+            "cache_hit_rate": cached / max(1, self.prefill_tokens_run
+                                           + cached),
+            "cow_copies": self.pool.cow_copies,
+            "cache_evictions": self.pool.evictions,
             "kv_util_mean": float(np.mean(self._util_samples))
             if self._util_samples else 0.0,
             "kv_util_peak": self.pool.peak_used / self.pool.num_total,

@@ -61,6 +61,15 @@ class Sequence:
         # tokens whose KV is in the arena (prompt + generated - 1 once
         # decoding: the latest sampled token's KV is written by the next step)
         self.cache_len = 0
+        # prefill progress: tokens of prefill_tokens() already in the arena
+        # (prefix-cache hits + completed chunks); equals cache_len while the
+        # sequence is mid-prefill, frozen at the prefill target afterwards
+        self.prefill_cursor = 0
+        # prompt tokens served from the prefix cache (across re-admissions)
+        self.num_cached_tokens = 0
+        # chain hashes of prefill_tokens(), computed once at admission so
+        # per-chunk registration does not rehash the whole prefix
+        self.prefix_hashes: List[int] = []
         self.num_preemptions = 0
         self.first_token_time: Optional[float] = None
         self.finish_time: Optional[float] = None
@@ -77,6 +86,14 @@ class Sequence:
         """Tokens to run at (re-)prefill: prompt plus anything generated
         before a preemption."""
         return self.prompt + self.generated
+
+    @property
+    def prefill_target(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prefill_target - self.prefill_cursor
 
     @property
     def num_generated(self) -> int:
@@ -114,6 +131,8 @@ class Sequence:
         self.status = SequenceStatus.WAITING
         self.block_ids = []
         self.cache_len = 0
+        self.prefill_cursor = 0
+        self.prefix_hashes = []
         self.num_preemptions += 1
 
     # -- metrics ------------------------------------------------------------

@@ -3,16 +3,28 @@
 Policy (vLLM-v0 style, adapted to the fixed-shape jit constraint):
 
   * Admission is FCFS from the waiting queue, gated by the free-block
-    budget: a prompt is admitted only if all its prefill blocks fit.
+    budget. With prefix caching on, a prompt's full-block chain is first
+    matched against the pool's prefix index: matched blocks are shared
+    (refcounted) instead of allocated, the match is capped at prompt-1
+    tokens (at least one token must run to produce logits), and a cap that
+    lands mid-block copies that block on write before the sequence may fill
+    its tail.
   * Each step is either one prefill batch or one decode batch (fixed-shape,
     padded to buckets so jit recompilation is bounded). Prefill is
     prioritized, but never twice in a row while sequences are decoding --
     this alternation plus FCFS preemption order makes the oldest request
     always progress (no starvation).
+  * Chunked prefill: a prompt prefills in `max_prefill_tokens`-sized chunks
+    across steps (the per-sequence `prefill_cursor` tracks progress), so a
+    long prompt never monopolizes a step and decode latency stays bounded --
+    the alternation rule interleaves decode steps between chunks. Blocks are
+    allocated per chunk, not for the whole prompt up front.
   * When the pool cannot cover the decode batch's next KV writes, running
     sequences are preempted youngest-first (recompute-style eviction: blocks
     freed, sequence requeued at the *front* of the waiting queue with its
-    generated tokens kept).
+    generated tokens kept). A preempted sequence's filled full blocks are
+    registered in the prefix index first, so -- capacity permitting -- its
+    resume re-prefills only the un-cached suffix.
 
 Progress guarantee: the engine validates that the pool can hold at least one
 maximal sequence, so a lone running sequence can always allocate its next
@@ -23,9 +35,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, List, Optional, Set
 
-from .kv_pool import PagedKVPool
+from .kv_pool import PagedKVPool, chain_hashes
 from .request import Sequence, SequenceStatus
 
 
@@ -33,15 +45,20 @@ from .request import Sequence, SequenceStatus
 class StepPlan:
     kind: str                  # "prefill" | "decode"
     seqs: List[Sequence]
+    # prefill only: tokens of prefill_tokens() each sequence runs this step,
+    # starting at its prefill_cursor
+    windows: Optional[List[int]] = None
 
 
 class Scheduler:
     def __init__(self, pool: PagedKVPool, *, max_prefill_batch: int = 8,
-                 max_prefill_tokens: int = 2048, max_decode_batch: int = 32):
+                 max_prefill_tokens: int = 2048, max_decode_batch: int = 32,
+                 chunked_prefill: bool = False):
         self.pool = pool
         self.max_prefill_batch = max_prefill_batch
         self.max_prefill_tokens = max_prefill_tokens
         self.max_decode_batch = max_decode_batch
+        self.chunked_prefill = chunked_prefill
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self.num_preemptions = 0
@@ -63,7 +80,14 @@ class Scheduler:
             if victim is keep:
                 continue
             self.running.remove(victim)
-            self.pool.free_blocks(victim.block_ids)
+            if self.pool.enable_prefix_cache:
+                # keep the evicted KV matchable: resume (or any request with
+                # the same prefix) re-prefills only the un-cached suffix
+                self.pool.register_prefix(victim.prefill_tokens(),
+                                          victim.block_ids, victim.cache_len)
+            # free tail-first so the cached-free LRU evicts chain tails
+            # before the heads that every matching prefix needs
+            self.pool.free_blocks(reversed(victim.block_ids))
             victim.preempt()
             self.waiting.appendleft(victim)
             self.num_preemptions += 1
@@ -72,30 +96,135 @@ class Scheduler:
 
     # -- step composition ---------------------------------------------------
 
+    def _grow_window(self, seq: Sequence, want: int) -> int:
+        """Allocate blocks so `seq` can prefill `want` more tokens; shrinks
+        the window to what the free-block budget covers. Returns the granted
+        window (0 = no progress possible)."""
+        if want <= 0:
+            return 0
+        bs = self.pool.block_size
+        avail = (len(seq.block_ids) + self.pool.num_free) * bs \
+            - seq.prefill_cursor
+        window = min(want, avail)
+        if window <= 0:
+            return 0
+        need = self.pool.blocks_for(seq.prefill_cursor + window) \
+            - len(seq.block_ids)
+        if need > 0:
+            seq.block_ids.extend(self.pool.alloc(need))
+        return window
+
+    def _try_admit(self, seq: Sequence, want: int,
+                   pending: Set[int]) -> Optional[int]:
+        """Admit a waiting sequence: match its prefix chain against the
+        cache, share matched blocks, COW a mid-block cap, and allocate the
+        first window. Returns the granted window, 0 to defer the sequence to
+        the next step (its prefix is being written by this very batch), or
+        None when the block budget cannot cover admission."""
+        tokens = seq.prefill_tokens()
+        target = len(tokens)
+        bs = self.pool.block_size
+        matched: List[int] = []
+        hashes: List[int] = []
+        if self.pool.enable_prefix_cache:
+            # the prompt is immutable while waiting: hash it once and keep
+            # the chain on the sequence across failed admission retries and
+            # for per-chunk registration (preempt() clears it)
+            if not seq.prefix_hashes:
+                seq.prefix_hashes = chain_hashes(tokens, bs)
+            hashes = seq.prefix_hashes
+            if hashes and hashes[0] in pending:
+                # an earlier admission in this same batch is about to write
+                # and register this prefix; wait one step and share it
+                return 0
+            matched = self.pool.match_prefix(tokens, hashes)
+        while True:
+            cached = min(len(matched) * bs, target - 1)
+            kept = -(-cached // bs)
+            matched = matched[:kept]
+            window = target - cached
+            if self.chunked_prefill:
+                window = min(window, max(want, 1))
+            # block budget: fresh blocks for the window, one COW copy if the
+            # match cap lands mid-block, and revived cached-free blocks all
+            # come out of num_free
+            need_new = self.pool.blocks_for(cached + window) - kept
+            need_cow = 1 if cached % bs else 0
+            revive = sum(1 for b in matched if self.pool.is_cached_free(b))
+            if need_new + need_cow + revive <= self.pool.num_free:
+                break
+            if not matched:
+                return None
+            # share + COW overhead does not fit: degrade gracefully by
+            # dropping the least-valuable cached block (the chain tail) and
+            # recomputing its tokens instead
+            matched = matched[:-1]
+        self.pool.share(matched)
+        seq.block_ids = list(matched)
+        if need_cow:
+            seq.block_ids[-1] = self.pool.copy_on_write(seq.block_ids[-1])
+            # the COW'd tail is not an avoided allocation (its KV is still
+            # reused, which num_cached_tokens reflects)
+            self.pool.hit_blocks -= 1
+        if need_new > 0:
+            seq.block_ids.extend(self.pool.alloc(need_new))
+        seq.prefill_cursor = cached
+        seq.cache_len = cached
+        seq.num_cached_tokens += cached
+        seq.status = SequenceStatus.PREFILL
+        pending.update(hashes[:(cached + window) // bs])
+        return window
+
     def _try_prefill(self) -> Optional[StepPlan]:
         batch: List[Sequence] = []
+        windows: List[int] = []
         budget = self.max_prefill_tokens
+        # 1. continue partially-prefilled running sequences, oldest first
+        if self.chunked_prefill:
+            for seq in sorted(self.running, key=lambda s: s.arrival_time):
+                if seq.status != SequenceStatus.PREFILL:
+                    continue
+                if len(batch) >= self.max_prefill_batch or budget <= 0:
+                    break
+                window = self._grow_window(
+                    seq, min(seq.prefill_remaining, budget))
+                if window == 0:
+                    # block-starved (free list empty, tail block full):
+                    # younger sequences with in-block slack can still
+                    # advance without allocating — no stealing possible
+                    continue
+                batch.append(seq)
+                windows.append(window)
+                budget -= window
+        # 2. admit new / resumed sequences FCFS
+        pending: Set[int] = set()
         while self.waiting and len(batch) < self.max_prefill_batch:
             seq = self.waiting[0]
-            n_tok = len(seq.prefill_tokens())
-            if batch and n_tok > budget:
+            if not self.chunked_prefill and batch \
+                    and seq.prefill_remaining > budget:
                 break
-            need = self.pool.blocks_for(n_tok)
-            if not self.pool.can_alloc(need):
+            if self.chunked_prefill and batch and budget <= 0:
                 break
-            seq.block_ids = self.pool.alloc(need)
-            seq.cache_len = 0
-            seq.status = SequenceStatus.PREFILL
+            window = self._try_admit(seq, budget, pending)
+            if window is None or window == 0:
+                break
             batch.append(self.waiting.popleft())
-            budget -= n_tok
+            windows.append(window)
+            budget -= window
         if not batch:
             return None
-        self.running.extend(batch)
-        return StepPlan("prefill", batch)
+        for seq in batch:
+            if seq not in self.running:
+                self.running.append(seq)
+        return StepPlan("prefill", batch, windows)
 
     def _try_decode(self) -> Optional[StepPlan]:
-        while self.running:
-            batch = sorted(self.running,
+        while True:
+            ready = [s for s in self.running
+                     if s.status == SequenceStatus.DECODE]
+            if not ready:
+                return None
+            batch = sorted(ready,
                            key=lambda s: s.arrival_time)[:self.max_decode_batch]
             # blocks needed to write each sequence's next token KV
             short = []
@@ -108,30 +237,44 @@ class Scheduler:
             if need <= self.pool.num_free:
                 for seq in short:
                     seq.block_ids.extend(self.pool.alloc(1))
-                for seq in batch:
-                    seq.status = SequenceStatus.DECODE
                 return StepPlan("decode", batch)
             if not self._preempt_youngest(keep=batch[0]):
                 raise RuntimeError(
                     "KV pool too small for a single sequence; raise n_blocks")
-        return None
 
     def schedule(self) -> Optional[StepPlan]:
-        decode_possible = bool(self.running)
-        prefer_prefill = bool(self.waiting) and not (
+        decode_possible = any(s.status == SequenceStatus.DECODE
+                              for s in self.running)
+        prefill_work = bool(self.waiting) or any(
+            s.status == SequenceStatus.PREFILL for s in self.running)
+        prefer_prefill = prefill_work and not (
             self._last_was_prefill and decode_possible)
         plan = None
         if prefer_prefill:
             plan = self._try_prefill()
         if plan is None and decode_possible:
             plan = self._try_decode()
-        if plan is None and self.waiting and not prefer_prefill:
+        if plan is None and prefill_work and not prefer_prefill:
             plan = self._try_prefill()
+        if plan is None and prefill_work and not decode_possible \
+                and self.running:
+            # every runnable sequence is mid-prefill but starved of blocks:
+            # evict youngest-first until the oldest can advance
+            oldest = min(self.running, key=lambda s: s.arrival_time)
+            while self._preempt_youngest(keep=oldest):
+                plan = self._try_prefill()
+                if plan is not None:
+                    break
+            if plan is None:
+                raise RuntimeError(
+                    "KV pool too small for a single sequence; raise n_blocks")
         self._last_was_prefill = plan is not None and plan.kind == "prefill"
         return plan
 
     def finish(self, seq: Sequence) -> None:
-        """Release a finished sequence's resources."""
+        """Release a finished sequence's resources. Registered prefix blocks
+        survive on the pool's cached-free list (tail-first, so eviction
+        reclaims chain tails before shared heads) until evicted."""
         self.running.remove(seq)
-        self.pool.free_blocks(seq.block_ids)
+        self.pool.free_blocks(reversed(seq.block_ids))
         seq.block_ids = []

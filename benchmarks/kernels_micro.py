@@ -11,9 +11,58 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.attention import decode_attention_lamp
+from repro.core.policy import LampSite
 from repro.kernels import ops, ref
+from repro.kernels.paged_attention import decode_kv_bytes
 
 from .common import emit, timed
+
+
+def paged_decode_micro(R: int = 8, H: int = 4, Hkv: int = 2, hd: int = 64,
+                       bs: int = 16, n_max: int = 16):
+    """Gather-vs-fused paged decode at R concurrent ragged sequences."""
+    rng = np.random.default_rng(0)
+    n_blocks = 1 + R * n_max
+    arena_k = jnp.asarray(rng.normal(size=(n_blocks, bs, Hkv, hd)) * 1.5,
+                          jnp.float32)
+    arena_v = jnp.asarray(rng.normal(size=(n_blocks, bs, Hkv, hd)),
+                          jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, n_max * bs, size=R), jnp.int32)
+    perm = rng.permutation(np.arange(1, n_blocks))
+    bt = np.zeros((R, n_max), np.int32)
+    for r in range(R):
+        nb = -(-int(lengths[r]) // bs)
+        bt[r, :nb] = perm[r * n_max:r * n_max + nb]
+    bt = jnp.asarray(bt)
+    q = jnp.asarray(rng.normal(size=(R, H, 1, hd)) * 1.5, jnp.float32)
+    site = LampSite(enabled=True, rule="relaxed", mu=7, tau=0.05,
+                    granularity=0)
+
+    @jax.jit
+    def gather_decode(q, ak, av, bt, lengths):
+        ks = ak[bt].reshape(R, -1, Hkv, hd)
+        vs = av[bt].reshape(R, -1, Hkv, hd)
+        kh = jnp.repeat(jnp.moveaxis(ks, 2, 1), H // Hkv, axis=1)
+        vh = jnp.repeat(jnp.moveaxis(vs, 2, 1), H // Hkv, axis=1)
+        out, aux = decode_attention_lamp(q, kh, vh, lengths, site,
+                                         reduce=False)
+        return out, aux.n_selected
+
+    us_g, (out_g, nsel_g) = timed(
+        lambda: gather_decode(q, arena_k, arena_v, bt, lengths))
+    us_f, (out_f, nsel_f) = timed(
+        lambda: ops.paged_decode_attention(q, arena_k, arena_v, bt, lengths,
+                                           site, interpret=True))
+    err = float(jnp.max(jnp.abs(out_f - out_g)))
+    b_gather, b_fused = decode_kv_bytes(
+        np.asarray(lengths), n_max=n_max, block_size=bs,
+        bytes_per_token=Hkv * hd * 4, lamp=True)
+    emit("kernel_paged_decode_gather", us_g,
+         f"bytes_kv={b_gather};nsel={int(jnp.sum(nsel_g))}")
+    emit("kernel_paged_decode_fused", us_f,
+         f"bytes_kv={b_fused};nsel={int(jnp.sum(nsel_f))};max_err={err:.2e};"
+         f"bytes_saved={1.0 - b_fused / b_gather:.1%}")
 
 
 def kernels_micro():
@@ -47,6 +96,12 @@ def kernels_micro():
     emit("kernel_flash_decode_2k", us,
          f"max_err={float(jnp.max(jnp.abs(out - want))):.2e};"
          f"nsel={int(nsel)};nsel_ref={int(nref)}")
+
+    # paged decode: gather reference vs fused kernel over one block arena.
+    # Interpret-mode wall time is not TPU perf; the decisive column is the
+    # modeled KV bytes DMA'd per step (the gather path always moves the
+    # full block-table span, the fused kernel only live blocks).
+    paged_decode_micro()
 
     # ps_matmul
     a = jax.random.normal(key, (256, 256))

@@ -1,5 +1,6 @@
 """Serving benchmark: continuous-batching engine vs the static-batch loop,
-plus a shared-prefix stream for the prefix cache.
+a shared-prefix stream for the prefix cache, and a gather-vs-fused
+paged-attention kernel comparison.
 
 Reports throughput, latency percentiles, KV-block utilization, and the LAMP
 overhead (lamp on vs off) for both serving modes on the same request set:
@@ -17,6 +18,15 @@ can hit the cache of earlier ones) through the engine with prefix caching +
 chunked prefill ON and OFF, checks the per-request outputs are
 token-identical, and reports the KV blocks allocated and prefill tokens
 computed by each.
+
+The kernel section replays one decode-heavy stream (every request admitted
+up front, so the decode batch stays >= 8 concurrent sequences) through the
+engine with kernel="gather" and kernel="pallas", checks the outputs are
+token-identical, and reports the measured decode-step latency plus the
+modeled per-step KV traffic of each path. On CPU the fused kernel runs in
+interpret mode, so its wall time is NOT TPU performance -- the decisive
+column is bytes moved (the gather path always streams the full
+block-table span; the fused kernel only live blocks).
 
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
 """
@@ -150,6 +160,67 @@ def bench_prefix_cache(cfg, params, rng, n_requests):
     return saved
 
 
+def run_kernel_stream(cfg, params, reqs, kernel, *, block_size=8,
+                      max_model_len=128):
+    """All requests admitted up front -> a fat continuous decode batch."""
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=block_size, max_model_len=max_model_len,
+        max_decode_batch=16, use_lamp=True, kernel=kernel))
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    outs, dec_wall, dec_steps, conc = [], 0.0, 0, []
+    while engine.has_unfinished():
+        before = engine.decode_steps
+        alive = len(engine.scheduler.running)
+        t0 = time.monotonic()
+        done = engine.step()
+        dt = time.monotonic() - t0
+        if engine.decode_steps > before:
+            dec_wall += dt
+            dec_steps += 1
+            conc.append(alive)
+        outs.extend(done)
+    final_lens = [len(p) + n for p, n in reqs]
+    from repro.kernels.paged_attention import decode_kv_bytes
+    b_gather, b_fused = decode_kv_bytes(
+        final_lens, n_max=engine.blocks_per_seq, block_size=block_size,
+        bytes_per_token=cfg.n_kv_heads * cfg.hd * 4, lamp=True)
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "decode_step_us": dec_wall / max(dec_steps, 1) * 1e6,
+            "mean_concurrency": float(np.mean(conc)) if conc else 0.0,
+            "bytes_per_step": b_fused if kernel == "pallas" else b_gather,
+            "lamp_rate": engine.stats()["lamp_recompute_rate"]}
+
+
+def bench_kernel_paths(cfg, params, rng, n_requests):
+    """Gather vs fused paged attention on one decode-heavy stream."""
+    n = max(n_requests, 12)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=24,
+                         min_new=10, max_new=16)
+    rows = {}
+    for kernel in ("gather", "pallas"):
+        run_kernel_stream(cfg, params, reqs[:2], kernel)   # warm compiles
+        rows[kernel] = run_kernel_stream(cfg, params, reqs, kernel)
+        r = rows[kernel]
+        print(f"serve_kernel_{kernel},{r['decode_step_us']:.0f},"
+              f"kv_bytes_per_step={r['bytes_per_step']}"
+              f";concurrency={r['mean_concurrency']:.1f}"
+              f";lamp_rate={r['lamp_rate']:.4f}")
+    identical = rows["gather"]["tokens"] == rows["pallas"]["tokens"]
+    saved = 1.0 - (rows["pallas"]["bytes_per_step"]
+                   / max(1, rows["gather"]["bytes_per_step"]))
+    print(f"serve_kernel_fused_vs_gather,0,"
+          f"bytes_saved={saved:.1%};outputs_identical={identical}"
+          f";concurrency={rows['pallas']['mean_concurrency']:.1f}")
+    if not identical:
+        raise SystemExit("fused-kernel outputs diverged from gather path")
+    if rows["pallas"]["mean_concurrency"] < 8:
+        raise SystemExit("kernel bench fell below 8 concurrent sequences")
+    if saved <= 0:
+        raise SystemExit("fused kernel did not reduce modeled KV traffic")
+    return saved
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -189,6 +260,8 @@ def main():
     print(f"serve_engine_vs_static,0,speedup={spd:.2f}x")
 
     bench_prefix_cache(cfg, params, rng, args.requests)
+
+    bench_kernel_paths(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; Mosaic on TPU).
 
-  lamp_attention -- one-pass relaxed-LAMP flash attention (the paper kernel)
-  flash_decode   -- exact two-pass rule-(9) decode attention
-  ps_matmul      -- PS(mu)-accumulating blocked matmul
-  rmsnorm        -- fused RMSNorm forward
+  lamp_attention  -- one-pass relaxed-LAMP flash attention (the paper kernel)
+  flash_decode    -- exact two-pass rule-(9) decode attention
+  paged_attention -- gather-free paged decode + windowed prefill over the
+                     serving engine's KV block arena (scalar-prefetched
+                     block-table index maps, LAMP two-pass selection)
+  ps_matmul       -- PS(mu)-accumulating blocked matmul
+  rmsnorm         -- fused RMSNorm forward
 
 ops.py = public jit'd wrappers; ref.py = pure-jnp oracles.
 """

@@ -2,21 +2,33 @@
 
 `interpret` defaults to True off-TPU (this container is CPU-only; interpret
 mode executes the kernel bodies in Python for correctness validation) and
-False on TPU, where the kernels compile to Mosaic.
+False on TPU, where the kernels compile to Mosaic. The REPRO_PALLAS_INTERPRET
+env var overrides the default in both directions ("1" forces interpret mode,
+"0" forces compiled); tests/conftest.py pins it to "1" so tier-1 tests always
+exercise the real kernel code paths on CPU instead of skipping them.
 """
 
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from .flash_decode import flash_decode as _flash_decode
 from .lamp_attention import lamp_flash_attention as _lamp_flash_attention
+from .paged_attention import (
+    paged_decode_attention as _paged_decode_attention,
+    paged_prefill_attention as _paged_prefill_attention,
+)
 from .ps_matmul import ps_matmul as _ps_matmul
 from .rmsnorm import rmsnorm as _rmsnorm
 
 
 def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env:  # empty string == unset: fall through to the backend default
+        return env.lower() not in ("0", "false")
     return jax.default_backend() != "tpu"
 
 
@@ -36,6 +48,21 @@ def flash_decode(q, k_cache, v_cache, length, *, mu: int = 7, tau: float = 0.05,
     return _flash_decode(q, k_cache, v_cache, length, mu=mu, tau=tau,
                          block_k=block_k, k_subtile=k_subtile,
                          interpret=interpret)
+
+
+def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths, site,
+                           *, window=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
+                                   site, window=window, interpret=interpret)
+
+
+def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts, site,
+                            *, window=None, block_q=None, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
+                                    site, window=window, block_q=block_q,
+                                    interpret=interpret)
 
 
 def ps_matmul(a, b, *, mu: int = 7, block_m: int = 128, block_n: int = 128,

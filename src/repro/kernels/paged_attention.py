@@ -1,0 +1,538 @@
+"""Fused Pallas paged-attention kernels: gather-free decode + windowed prefill.
+
+Block-index map
+---------------
+The serving engine stores KV in a per-layer block arena of shape
+(n_blocks, block_size, Hkv, hd); sequence r owns the ordered blocks
+``block_tables[r]`` (0 = reserved null block used for padding). The gather
+reference path (models/layers.py) materializes each row's view with
+``arena[block_tables]`` -- O(n_max * block_size) HBM traffic per row per
+step no matter how many tokens are live.
+
+These kernels consume the arena + block tables directly. ``block_tables``
+and the per-row lengths/starts are scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``), so the K/V BlockSpec index map resolves
+grid step (row, kv-block j) to arena block ``block_tables[row, j]`` and the
+pipeline DMAs exactly that block into VMEM -- the host-side gather
+disappears. The index map clamps j into the row's *live* range [lo, hi]
+(past-the-length blocks, and blocks wholly outside the sliding window,
+re-map to an already-resident live block, costing no fresh DMA) and the
+block's compute is guarded with ``pl.when`` -- fully-masked blocks are
+skipped, not summed as zeros. GQA is resolved in the index map as well
+(query head -> kv head), so K/V are never repeated in memory.
+
+LAMP two-pass layout
+--------------------
+The LAMP look-ahead rules threshold against *global* row statistics of the
+low-precision logits: the row max of s = y + log|y| for the relaxed rules
+(9) / LN-(9), and the softmax normalizer (m, l) for the strict rule (8).
+Each variant is therefore a pair of ``pallas_call``s:
+
+  pass 1 (look-ahead): streams live K blocks, computes y_low = PS(mu)
+      logits with the same rounding points as ``core.mixed_matmul.dot_ps``
+      (granularity 0 = cast-only single MXU pass + final round; g >= 1 =
+      FP32 accumulation inside K-chunks of g lanes, re-round per chunk),
+      and reduces smax, m = max y_low, l = sum exp(y_low - m) per row.
+  pass 2 (recompute): streams live K and V blocks again, recomputes y_low
+      identically, selects with the exact rule threshold from the pass-1
+      stats, replaces selected logits with the FP32 product, online-softmax
+      accumulates P@V, and counts selections per row (the engine's
+      per-request recompute telemetry).
+
+Because both passes recompute y_low identically, the pair implements the
+materialized-softmax rules exactly: outputs match the gather reference path
+to float32 softmax roundoff and selection counts match bit-for-bit for the
+max-based rules (relaxed / relaxed_ln).
+
+Variants:
+  paged_decode_attention  -- one query row per sequence at absolute
+      position lengths[r] - 1; grid (R*H, n_max), like ``flash_decode``.
+  paged_prefill_attention -- windowed prefill: query tile x block grid
+      ((B*H, W/block_q, n_max)) with absolute-position causal masks
+      (query row w of sequence b sits at position starts[b] + w).
+
+The benchmark-only "random" control rule stays on the gather path
+(``supports_site``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.numerics import round_to_mantissa
+from repro.core.policy import LampSite
+
+_NEG = -1e30
+_TINY = 1.1754944e-38  # float32 tiny: masked_softmax's normalizer clamp
+
+
+def supports_site(site: LampSite) -> bool:
+    """The fused kernels implement every materialized-softmax LAMP rule the
+    serving paths use; the App C.4 'random' control arm (benchmark-only,
+    needs a resampled key per call) stays on the gather path."""
+    return (not site.enabled) or site.rule in ("none", "strict", "relaxed",
+                                               "relaxed_ln")
+
+
+def _y_low(q, k, mu: int, granularity: int):
+    """PS(mu) q @ k^T, bitwise-matching ``dot_ps``: granularity 0
+    (cast-only) = one FP32 pass + final round; g >= 1 = FP32 accumulation
+    inside K-chunks of g lanes, re-rounding the running accumulator."""
+    dn = (((1,), (1,)), ((), ()))
+    if mu >= 23:
+        return jax.lax.dot_general(q, k, dn, preferred_element_type=jnp.float32)
+    D = q.shape[-1]
+    if granularity == 0 or granularity >= D:
+        y = jax.lax.dot_general(q, k, dn, preferred_element_type=jnp.float32)
+        return round_to_mantissa(y, mu)
+    g = int(granularity)
+    acc = jnp.zeros((q.shape[0], k.shape[0]), jnp.float32)
+    for s in range(-(-D // g)):
+        part = jax.lax.dot_general(q[:, s * g:(s + 1) * g],
+                                   k[:, s * g:(s + 1) * g], dn,
+                                   preferred_element_type=jnp.float32)
+        acc = round_to_mantissa(acc + part, mu)
+    return acc
+
+
+def _select(y_low, ok, smax, m_low, l_low, n_row, *, rule: str, tau: float,
+            n_ref: int):
+    """LAMP look-ahead mask on one logits tile from pass-1 row stats.
+    smax / m_low / l_low / n_row broadcast against y_low's rows."""
+    if rule == "none":
+        return jnp.zeros(y_low.shape, bool)
+    if rule == "strict":
+        z = jnp.where(ok, jnp.exp(y_low - m_low), 0.0) / jnp.maximum(l_low, _TINY)
+        return ok & (2.0 * z * (1.0 - z) * jnp.abs(y_low) > tau)
+    s = y_low + jnp.log(jnp.abs(y_low))      # -inf at y == 0: never selects
+    if rule == "relaxed":
+        if tau == 0.0:
+            return ok & jnp.isfinite(s)
+        return ok & (s > jnp.log(tau) + smax)
+    if rule == "relaxed_ln":
+        tau_row = tau * jnp.sqrt(n_ref / jnp.maximum(n_row, 1).astype(jnp.float32))
+        tau_row = jnp.minimum(tau_row, 1.0 - 1e-6)
+        return ok & (s > jnp.log(tau_row) + smax)
+    raise ValueError(f"unsupported LAMP rule {rule!r}")
+
+
+# ---------------------------------------------------------------------------
+# Decode variant: one query row per sequence, grid (R*H, n_max)
+# ---------------------------------------------------------------------------
+
+def _dec_mask(j, L, bs, window):
+    """(live, ok): whether KV block j intersects the valid range of a row of
+    effective length L, and the per-position mask inside the block."""
+    kj = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    ok = kj < L
+    live = j * bs < L
+    if window is not None:
+        ok &= kj > L - 1 - window
+        live &= (j + 1) * bs > L - window
+    return live, ok
+
+
+def _dec_stats_kernel(bt_ref, len_ref, q_ref, k_ref, stats_ref,
+                      smax_ref, m_ref, l_ref,
+                      *, H, bs, n_k, mu, granularity, scale, window):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        smax_ref[...] = jnp.full_like(smax_ref, _NEG)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    L = len_ref[i // H]
+    live, ok = _dec_mask(j, L, bs, window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale       # (1, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        y = _y_low(q, k, mu, granularity)              # (1, bs)
+        s = jnp.where(ok, y + jnp.log(jnp.abs(y)), _NEG)
+        smax_ref[...] = jnp.maximum(smax_ref[...], jnp.max(s))
+        m_new = jnp.maximum(m_ref[...], jnp.max(jnp.where(ok, y, _NEG)))
+        p = jnp.where(ok, jnp.exp(y - m_new), 0.0)
+        l_ref[...] = l_ref[...] * jnp.exp(m_ref[...] - m_new) + jnp.sum(p)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        stats_ref[0, 0] = smax_ref[...]
+        stats_ref[0, 1] = m_ref[...]
+        stats_ref[0, 2] = l_ref[...]
+
+
+def _dec_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, stats_ref,
+                o_ref, nsel_ref, acc_ref, m_ref, l_ref, cnt_ref,
+                *, H, bs, n_k, lamp, mu, granularity, rule, tau, n_ref_ln,
+                scale, window):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    L = len_ref[i // H]
+    live, ok = _dec_mask(j, L, bs, window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0].astype(jnp.float32)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if lamp:
+            y_low = _y_low(q, k, mu, granularity)
+            sel = _select(y_low, ok, stats_ref[0, 0], stats_ref[0, 1],
+                          stats_ref[0, 2], L, rule=rule, tau=tau,
+                          n_ref=n_ref_ln)
+            if rule == "none":
+                y = y_low
+            else:
+                y_exact = jax.lax.dot_general(
+                    q, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                y = jnp.where(sel, y_exact, y_low)
+            cnt_ref[...] += jnp.sum(sel.astype(jnp.float32))
+        else:
+            y = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        y = jnp.where(ok, y, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(y))
+        p = jnp.where(ok, jnp.exp(y - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], _TINY)
+                    ).astype(o_ref.dtype)
+        nsel_ref[0, 0] = cnt_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("site", "window", "interpret"))
+def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
+                           site: LampSite, *, window: Optional[int] = None,
+                           interpret: bool = True,
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step straight off the paged arena (no pre-gather).
+
+    q: (R, H, 1, hd); arena_k/v: (n_blocks, block_size, Hkv, hd);
+    block_tables: (R, n_max) int32; lengths: (R,) *effective* lengths (the
+    new token's KV already written, so valid positions are [0, lengths[r])).
+    Returns (out (R, H, 1, hd) float32, n_selected (R,) float32 summed over
+    heads) -- the same contract as ``decode_attention_lamp(reduce=False)``.
+    """
+    R, H, Tq, hd = q.shape
+    if Tq != 1:
+        raise ValueError(f"decode takes one query row, got Tq={Tq}")
+    _, bs, Hkv, _ = arena_k.shape
+    n_max = block_tables.shape[1]
+    rep = H // Hkv
+    scale = hd ** -0.5
+    qf = q.reshape(R * H, 1, hd)
+    bt = block_tables.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+    lamp = bool(site.enabled)
+    # rule "none" keeps the y_low softmax but selects nothing: the look-ahead
+    # stats pass would be dead work, so only run it for a selecting rule
+    need_stats = lamp and site.rule != "none"
+
+    def kv_map(i, j, bt_ref, len_ref):
+        r = i // H
+        L = len_ref[r]
+        hi = (L - 1) // bs
+        lo = 0 if window is None else jnp.maximum(L - window, 0) // bs
+        return (bt_ref[r, jnp.clip(j, lo, hi)], 0, (i % H) // rep, 0)
+
+    q_spec = pl.BlockSpec((1, 1, hd), lambda i, j, *_: (i, 0, 0))
+    kv_spec = pl.BlockSpec((1, bs, 1, hd), kv_map)
+    stats_spec = pl.BlockSpec((1, 3), lambda i, j, *_: (i, 0))
+
+    if need_stats:
+        stats = pl.pallas_call(
+            functools.partial(_dec_stats_kernel, H=H, bs=bs, n_k=n_max,
+                              mu=site.mu, granularity=site.granularity,
+                              scale=scale, window=window),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(R * H, n_max),
+                in_specs=[q_spec, kv_spec],
+                out_specs=stats_spec,
+                scratch_shapes=[pltpu.VMEM((), jnp.float32)] * 3,
+            ),
+            out_shape=jax.ShapeDtypeStruct((R * H, 3), jnp.float32),
+            interpret=interpret,
+        )(bt, lens, qf, arena_k)
+    else:
+        stats = jnp.zeros((R * H, 3), jnp.float32)
+
+    out, nsel = pl.pallas_call(
+        functools.partial(_dec_kernel, H=H, bs=bs, n_k=n_max, lamp=lamp,
+                          mu=site.mu, granularity=site.granularity,
+                          rule=site.rule, tau=site.tau, n_ref_ln=site.n_ref,
+                          scale=scale, window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(R * H, n_max),
+            in_specs=[q_spec, kv_spec, kv_spec, stats_spec],
+            out_specs=[
+                pl.BlockSpec((1, 1, hd), lambda i, j, *_: (i, 0, 0)),
+                pl.BlockSpec((1, 1), lambda i, j, *_: (i, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((1, hd), jnp.float32),   # acc
+                pltpu.VMEM((), jnp.float32),        # m
+                pltpu.VMEM((), jnp.float32),        # l
+                pltpu.VMEM((), jnp.float32),        # nsel count
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((R * H, 1, hd), jnp.float32),
+            jax.ShapeDtypeStruct((R * H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, lens, qf, arena_k, arena_v, stats)
+    return (out.reshape(R, H, 1, hd),
+            jnp.sum(nsel.reshape(R, H), axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Windowed-prefill variant: query tile x block grid (B*H, n_q, n_max)
+# ---------------------------------------------------------------------------
+
+def _pre_mask(j, q0, bs, wq, window):
+    """(live, ok, qi): block liveness for the q-tile starting at absolute
+    position q0, and the absolute-position causal mask inside the tile."""
+    qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (wq, bs), 0)
+    kj = j * bs + jax.lax.broadcasted_iota(jnp.int32, (wq, bs), 1)
+    ok = kj <= qi
+    live = j * bs <= q0 + wq - 1
+    if window is not None:
+        ok &= kj > qi - window
+        live &= (j + 1) * bs - 1 > q0 - window
+    return live, ok, qi
+
+
+def _pre_stats_kernel(bt_ref, starts_ref, q_ref, k_ref,
+                      smax_o, m_o, l_o, smax_ref, m_ref, l_ref,
+                      *, H, bs, wq, n_k, mu, granularity, scale, window):
+    i, t, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        smax_ref[...] = jnp.full_like(smax_ref, _NEG)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = starts_ref[i // H] + t * wq
+    live, ok, _ = _pre_mask(j, q0, bs, wq, window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale       # (wq, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)         # (bs, hd)
+        y = _y_low(q, k, mu, granularity)              # (wq, bs)
+        s = jnp.where(ok, y + jnp.log(jnp.abs(y)), _NEG)
+        smax_ref[...] = jnp.maximum(smax_ref[...], jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m_ref[...],
+                            jnp.max(jnp.where(ok, y, _NEG), axis=-1))
+        p = jnp.where(ok, jnp.exp(y - m_new[:, None]), 0.0)
+        l_ref[...] = (l_ref[...] * jnp.exp(m_ref[...] - m_new)
+                      + jnp.sum(p, axis=-1))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        smax_o[0] = smax_ref[...]
+        m_o[0] = m_ref[...]
+        l_o[0] = l_ref[...]
+
+
+def _pre_kernel(bt_ref, starts_ref, q_ref, k_ref, v_ref,
+                smax_ref, mlow_ref, llow_ref, o_ref, nsel_ref,
+                acc_ref, m_ref, l_ref, cnt_ref,
+                *, H, bs, wq, n_k, lamp, mu, granularity, rule, tau,
+                n_ref_ln, scale, window, Tk):
+    i, t, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    q0 = starts_ref[i // H] + t * wq
+    live, ok, qi = _pre_mask(j, q0, bs, wq, window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale
+        k = k_ref[0, :, 0].astype(jnp.float32)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        if lamp:
+            y_low = _y_low(q, k, mu, granularity)
+            # row_lengths as in attention_lamp: clip(qi + 1, 0, window|Tk)
+            n_row = jnp.clip(qi[:, :1] + 1, 0, Tk if window is None else window)
+            sel = _select(y_low, ok, smax_ref[0][:, None],
+                          mlow_ref[0][:, None], llow_ref[0][:, None], n_row,
+                          rule=rule, tau=tau, n_ref=n_ref_ln)
+            if rule == "none":
+                y = y_low
+            else:
+                y_exact = jax.lax.dot_general(
+                    q, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                y = jnp.where(sel, y_exact, y_low)
+            cnt_ref[...] += jnp.sum(sel.astype(jnp.float32), axis=-1)
+        else:
+            y = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        y = jnp.where(ok, y, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(y, axis=-1))
+        p = jnp.where(ok, jnp.exp(y - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], _TINY)[:, None]).astype(o_ref.dtype)
+        nsel_ref[0] = cnt_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("site", "window", "block_q",
+                                             "interpret"))
+def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
+                            site: LampSite, *, window: Optional[int] = None,
+                            block_q: Optional[int] = None,
+                            interpret: bool = True,
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed-prefill attention straight off the paged arena.
+
+    q: (B, H, W, hd) -- query row w of sequence b sits at absolute position
+    starts[b] + w and attends causally to positions 0..starts[b]+w of the
+    row's block table (the cached prefix plus this window's just-written
+    KV). Padded rows are computed like the gather path and discarded by the
+    caller. Returns (out (B, H, W, hd) float32, n_selected (B, W) float32
+    summed over heads and keys) -- the ``attention_lamp(reduce=False)``
+    telemetry contract.
+    """
+    B, H, W, hd = q.shape
+    _, bs, Hkv, _ = arena_k.shape
+    n_max = block_tables.shape[1]
+    rep = H // Hkv
+    scale = hd ** -0.5
+    wq = W if block_q is None else min(block_q, W)
+    if W % wq:
+        raise ValueError(f"W={W} % block_q={wq}")
+    n_q = W // wq
+    Tk = n_max * bs
+    qf = q.reshape(B * H, W, hd)
+    bt = block_tables.astype(jnp.int32)
+    st = starts.astype(jnp.int32)
+    lamp = bool(site.enabled)
+    need_stats = lamp and site.rule != "none"   # as in the decode variant
+
+    def kv_map(i, t, j, bt_ref, starts_ref):
+        b = i // H
+        q0 = starts_ref[b] + t * wq
+        hi = jnp.minimum((q0 + wq - 1) // bs, n_max - 1)
+        lo = 0 if window is None else \
+            jnp.minimum(jnp.maximum(q0 - window + 1, 0) // bs, hi)
+        return (bt_ref[b, jnp.clip(j, lo, hi)], 0, (i % H) // rep, 0)
+
+    q_spec = pl.BlockSpec((1, wq, hd), lambda i, t, j, *_: (i, t, 0))
+    kv_spec = pl.BlockSpec((1, bs, 1, hd), kv_map)
+    row_spec = pl.BlockSpec((1, wq), lambda i, t, j, *_: (i, t))
+
+    if need_stats:
+        row_shape = jax.ShapeDtypeStruct((B * H, W), jnp.float32)
+        smax, m_low, l_low = pl.pallas_call(
+            functools.partial(_pre_stats_kernel, H=H, bs=bs, wq=wq, n_k=n_max,
+                              mu=site.mu, granularity=site.granularity,
+                              scale=scale, window=window),
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=2,
+                grid=(B * H, n_q, n_max),
+                in_specs=[q_spec, kv_spec],
+                out_specs=[row_spec] * 3,
+                scratch_shapes=[pltpu.VMEM((wq,), jnp.float32)] * 3,
+            ),
+            out_shape=[row_shape] * 3,
+            interpret=interpret,
+        )(bt, st, qf, arena_k)
+    else:
+        smax = m_low = l_low = jnp.zeros((B * H, W), jnp.float32)
+
+    out, nsel = pl.pallas_call(
+        functools.partial(_pre_kernel, H=H, bs=bs, wq=wq, n_k=n_max,
+                          lamp=lamp, mu=site.mu, granularity=site.granularity,
+                          rule=site.rule, tau=site.tau, n_ref_ln=site.n_ref,
+                          scale=scale, window=window, Tk=Tk),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B * H, n_q, n_max),
+            in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, row_spec],
+            out_specs=[
+                pl.BlockSpec((1, wq, hd), lambda i, t, j, *_: (i, t, 0)),
+                row_spec,
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((wq, hd), jnp.float32),  # acc
+                pltpu.VMEM((wq,), jnp.float32),     # m
+                pltpu.VMEM((wq,), jnp.float32),     # l
+                pltpu.VMEM((wq,), jnp.float32),     # nsel counts
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, W, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, W), jnp.float32),
+        ],
+        interpret=interpret,
+    )(bt, st, qf, arena_k, arena_v, smax, m_low, l_low)
+    return (out.reshape(B, H, W, hd),
+            jnp.sum(nsel.reshape(B, H, W), axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Traffic model (benchmarks): KV bytes DMA'd per decode step, per layer
+# ---------------------------------------------------------------------------
+
+def decode_kv_bytes(lengths, *, n_max: int, block_size: int,
+                    bytes_per_token: int, window: Optional[int] = None,
+                    lamp: bool = True) -> Tuple[int, int]:
+    """(gather_bytes, fused_bytes) of KV traffic for one decode step of one
+    layer. The gather path materializes every row's full block-table span
+    (K and V); the fused kernels DMA only live blocks -- the LAMP look-ahead
+    pass re-reads K, so fused = live_blocks * (2K + V) when LAMP is on.
+    ``bytes_per_token`` = Hkv * hd * itemsize."""
+    import numpy as np
+    L = np.maximum(np.asarray(lengths, np.int64), 1)
+    gather = int(L.size) * n_max * block_size * bytes_per_token * 2
+    lo = (np.maximum(L - window, 0) // block_size if window is not None
+          else np.zeros_like(L))
+    hi = (L - 1) // block_size
+    live = int((hi - lo + 1).sum())
+    fused = live * block_size * bytes_per_token * (3 if lamp else 2)
+    return gather, fused

@@ -78,6 +78,12 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common prefix of this many tokens to "
                          "every prompt (prefix-cache traffic)")
+    ap.add_argument("--kernel", choices=("gather", "pallas"),
+                    default="gather",
+                    help="paged-attention path: 'gather' materializes the "
+                         "block-table span (reference); 'pallas' fuses the "
+                         "block gather into the attention kernel (fast path "
+                         "on TPU; interpret mode on CPU)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-lamp", action="store_true")
     args = ap.parse_args()
@@ -101,7 +107,8 @@ def main():
         max_model_len=max_len, use_lamp=not args.no_lamp,
         max_prefill_tokens=args.max_prefill_tokens,
         prefix_cache=args.prefix_cache,
-        chunked_prefill=args.chunked_prefill))
+        chunked_prefill=args.chunked_prefill,
+        kernel=args.kernel))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -109,7 +116,7 @@ def main():
           f"qps={args.qps} requests={args.num_requests} "
           f"pool={engine.pool.num_total}x{engine.pool.block_size} blocks "
           f"prefix_cache={args.prefix_cache} "
-          f"chunked_prefill={args.chunked_prefill}")
+          f"chunked_prefill={args.chunked_prefill} kernel={args.kernel}")
 
     t0 = time.monotonic()
     i, outputs = 0, []

@@ -245,7 +245,8 @@ def attention_decode_sublayer(cfg, p, x, *, cache_k, cache_v, length,
 def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
                                     block_tables, lengths,
                                     lamp_site: LampSite,
-                                    window: Optional[int] = None):
+                                    window: Optional[int] = None,
+                                    kernel: str = "gather"):
     """Single-token decode against a paged KV arena (one layer).
 
     x: (R, 1, d) hidden states for R slots of a continuous batch.
@@ -258,9 +259,13 @@ def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
         absolute position `lengths[r]`, i.e. block `block_tables[r, len//bs]`
         offset `len % bs`.
 
-    Gather-based paged attention: the per-sequence view reshapes the gathered
+    kernel="gather" (reference): the per-sequence view reshapes the gathered
     blocks so gathered flat index t == absolute position t, which makes the
     computation bit-identical to the dense-cache path for valid positions.
+    kernel="pallas": the fused paged-attention kernel reads live arena
+    blocks directly through the block-table index map (no gather, masked
+    blocks skipped); falls back to gather for sites the kernel does not
+    implement (the benchmark-only "random" rule).
     Returns (out, arena_k, arena_v, n_selected (R,), n_valid (R,)).
     """
     R = x.shape[0]
@@ -272,16 +277,27 @@ def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
     off = lengths % bs
     arena_k = arena_k.at[blk, off].set(k[:, 0].astype(arena_k.dtype))
     arena_v = arena_v.at[blk, off].set(v[:, 0].astype(arena_v.dtype))
-    ks = arena_k[block_tables].reshape(R, -1, Hkv, hd)
-    vs = arena_v[block_tables].reshape(R, -1, Hkv, hd)
     qh = jnp.swapaxes(q, 1, 2)                                # (R,H,1,hd)
-    kh = _repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)         # (R,H,S,hd)
-    vh = _repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
     window = window if window is not None else cfg.window
-    out, aux = A.decode_attention_lamp(qh, kh, vh, lengths + 1, lamp_site,
-                                       window=window, reduce=False)
+
+    from repro.kernels.paged_attention import supports_site
+    if kernel == "pallas" and supports_site(lamp_site):
+        from repro.kernels import ops as KOPS
+        eff = lengths + 1
+        out, nsel = KOPS.paged_decode_attention(
+            qh, arena_k, arena_v, block_tables, eff, lamp_site, window=window)
+        cap = eff if window is None else jnp.minimum(eff, window)
+        nval = (cap * H).astype(jnp.float32)
+    else:
+        ks = arena_k[block_tables].reshape(R, -1, Hkv, hd)
+        vs = arena_v[block_tables].reshape(R, -1, Hkv, hd)
+        kh = _repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)     # (R,H,S,hd)
+        vh = _repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
+        out, aux = A.decode_attention_lamp(qh, kh, vh, lengths + 1, lamp_site,
+                                           window=window, reduce=False)
+        nsel, nval = aux.n_selected, aux.n_valid
     out = jnp.swapaxes(out, 1, 2).reshape(R, 1, H * hd).astype(x.dtype)
-    return out @ p["wo"], arena_k, arena_v, aux.n_selected, aux.n_valid
+    return out @ p["wo"], arena_k, arena_v, nsel, nval
 
 
 # ---------------------------------------------------------------------------

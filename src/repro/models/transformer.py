@@ -324,7 +324,8 @@ def init_paged_cache(cfg, n_blocks: int, block_size: int,
 
 def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
                   block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
-                  use_lamp: bool = True, moe_groups: int = 1):
+                  use_lamp: bool = True, moe_groups: int = 1,
+                  kernel: str = "gather"):
     """Prefill a padded batch of prompts into the paged arena.
 
     tokens: (B, S) left-aligned prompts padded to the bucket length S;
@@ -342,13 +343,14 @@ def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
     starts = jnp.zeros_like(lengths)
     return paged_prefill_window(cfg, params, tokens, arena, block_tables,
                                 starts, lengths, use_lamp=use_lamp,
-                                moe_groups=moe_groups)
+                                moe_groups=moe_groups, kernel=kernel)
 
 
 def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
                          arena: Dict[str, Any], block_tables: jnp.ndarray,
                          starts: jnp.ndarray, lengths: jnp.ndarray, *,
-                         use_lamp: bool = True, moe_groups: int = 1):
+                         use_lamp: bool = True, moe_groups: int = 1,
+                         kernel: str = "gather"):
     """Prefill a *window* of each prompt against an existing block table.
 
     Row b runs tokens at absolute positions starts[b] .. starts[b] +
@@ -364,11 +366,16 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
     valid tokens in this window (>= 1; padded rows use starts=0, lengths=1
     and a null block table, writing only into the null block).
 
-    The constant gathered width (the full block-table span, as in decode) is
-    what buys the identity guarantee: attention over more keys than the
-    prompt needs costs extra FLOPs when max_model_len >> prompt, and the
-    planned Pallas paged-attention kernel (ROADMAP) is the place to win
-    that back without reintroducing shape-dependent numerics.
+    kernel="gather" (reference) pays a constant gathered width (the full
+    block-table span, as in decode): that is what buys the identity
+    guarantee, but attention over more keys than the prompt needs costs
+    extra FLOPs/bytes when max_model_len >> prompt. kernel="pallas" runs
+    the fused paged-attention kernel instead: blocks are DMA'd through the
+    block-table index map and fully-masked blocks (past each q-tile's
+    causal bound) are skipped, with the same row-wise numerics -- outputs
+    stay token-identical to the gather path (differential-tested). Sites
+    the kernel does not implement (the "random" control rule) fall back
+    to gather.
 
     Returns (last_logits (B, 1, V), arena, (n_selected (B,), n_valid (B,)))
     with last_logits at each row's final valid *window* position (only
@@ -389,6 +396,8 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
     off = jnp.where(valid_tok, positions % bs, 0)
     qmask = valid_tok.astype(jnp.float32)
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    from repro.kernels.paged_attention import supports_site
+    use_pallas = kernel == "pallas" and supports_site(site)
 
     def body(carry, xs):
         xc = carry
@@ -397,25 +406,39 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
         q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
         ck = ck.at[blk, off].set(k.astype(ck.dtype))
         cv = cv.at[blk, off].set(v.astype(cv.dtype))
-        # gather the full per-row view (cached prefix + this window);
-        # gathered flat index t == absolute position t, as in decode
-        ks = ck[block_tables].reshape(B, n_max * bs, Hkv, hd)
-        vs = cv[block_tables].reshape(B, n_max * bs, Hkv, hd)
         qh = jnp.swapaxes(q, 1, 2)
-        kh = LY._repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)
-        vh = LY._repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
         from repro.core import attention as CA
-        if site.enabled:
-            o, aux = CA.attention_lamp(qh, kh, vh, site, causal=True,
-                                       window=cfg.window, offset=starts,
-                                       reduce=False)
-            nsel = jnp.sum(aux.n_selected * qmask, axis=1)
-            nval = jnp.sum(aux.n_valid * qmask, axis=1)
+        if use_pallas:
+            from repro.kernels import ops as KOPS
+            o, nsel_rows = KOPS.paged_prefill_attention(
+                qh, ck, cv, block_tables, starts, site, window=cfg.window)
+            if site.enabled:
+                cap = n_max * bs if cfg.window is None else cfg.window
+                nval_rows = jnp.clip(positions + 1, 0, cap
+                                     ).astype(jnp.float32) * H
+                nsel = jnp.sum(nsel_rows * qmask, axis=1)
+                nval = jnp.sum(nval_rows * qmask, axis=1)
+            else:
+                nsel = jnp.zeros((B,), jnp.float32)
+                nval = jnp.zeros((B,), jnp.float32)
         else:
-            o = CA.attention_reference(qh, kh, vh, causal=True,
-                                       window=cfg.window, offset=starts)
-            nsel = jnp.zeros((B,), jnp.float32)
-            nval = jnp.zeros((B,), jnp.float32)
+            # gather the full per-row view (cached prefix + this window);
+            # gathered flat index t == absolute position t, as in decode
+            ks = ck[block_tables].reshape(B, n_max * bs, Hkv, hd)
+            vs = cv[block_tables].reshape(B, n_max * bs, Hkv, hd)
+            kh = LY._repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)
+            vh = LY._repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
+            if site.enabled:
+                o, aux = CA.attention_lamp(qh, kh, vh, site, causal=True,
+                                           window=cfg.window, offset=starts,
+                                           reduce=False)
+                nsel = jnp.sum(aux.n_selected * qmask, axis=1)
+                nval = jnp.sum(aux.n_valid * qmask, axis=1)
+            else:
+                o = CA.attention_reference(qh, kh, vh, causal=True,
+                                           window=cfg.window, offset=starts)
+                nsel = jnp.zeros((B,), jnp.float32)
+                nval = jnp.zeros((B,), jnp.float32)
         o = jnp.swapaxes(o, 1, 2).reshape(xc.shape[0], W, -1).astype(xc.dtype)
         xc = xc + o @ p_l["attn"]["wo"]
         h = LY.apply_norm(cfg, xc, p_l, "ln2")
@@ -441,11 +464,14 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
 def paged_decode_step(cfg, params, arena: Dict[str, Any],
                       block_tables: jnp.ndarray, lengths: jnp.ndarray,
                       tokens: jnp.ndarray, *, use_lamp: bool = True,
-                      moe_dropless: bool = True, moe_groups: int = 1):
+                      moe_dropless: bool = True, moe_groups: int = 1,
+                      kernel: str = "gather"):
     """One continuous-batch decode step over the paged arena.
 
     tokens: (R, 1) last sampled token per slot; lengths: (R,) cache fill
-    (the new token's KV lands at position lengths[r]). Returns
+    (the new token's KV lands at position lengths[r]). kernel selects the
+    attention path: "gather" (reference, materializes the block-table span)
+    or "pallas" (fused kernel, live blocks only). Returns
     (logits (R, 1, V), arena, (n_selected (R,), n_valid (R,))).
     """
     x = LY.embed(cfg, params["embed"], tokens, lengths[:, None])
@@ -461,7 +487,8 @@ def paged_decode_step(cfg, params, arena: Dict[str, Any],
         h = LY.apply_norm(cfg, xc, p_l, "ln1")
         a, ck, cv, nsel, nval = LY.paged_attention_decode_sublayer(
             cfg, p_l["attn"], h, arena_k=ck, arena_v=cv,
-            block_tables=block_tables, lengths=lengths, lamp_site=site)
+            block_tables=block_tables, lengths=lengths, lamp_site=site,
+            kernel=kernel)
         xc = xc + a
         h = LY.apply_norm(cfg, xc, p_l, "ln2")
         if cfg.family == "moe":

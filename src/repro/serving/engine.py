@@ -63,6 +63,12 @@ class EngineConfig:
     # chunked prefill: long prompts prefill max_prefill_tokens per step so
     # decode steps interleave and decode latency stays bounded
     chunked_prefill: bool = True
+    # attention path over the paged arena: "gather" materializes each row's
+    # full block-table span (reference, bit-identical to the dense cache);
+    # "pallas" runs the fused paged-attention kernel (live blocks DMA'd
+    # through the block-table index map, masked blocks skipped) -- the fast
+    # path on TPU, interpret mode on CPU
+    kernel: str = "gather"
 
 
 @dataclasses.dataclass
@@ -108,22 +114,22 @@ def _sample_rows(logits, seeds, counts, temps):
 _JIT_CACHE: Dict[Any, Any] = {}
 
 
-def _jitted_steps(cfg, use_lamp: bool):
-    key = (cfg, use_lamp)
+def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather"):
+    key = (cfg, use_lamp, kernel)
     fns = _JIT_CACHE.get(key)
     if fns is None:
         def _prefill(params, k, v, tokens, bt, starts, lengths, seeds,
                      counts, temps):
             logits, arena, (nsel, nval) = transformer.paged_prefill_window(
                 cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
-                use_lamp=use_lamp)
+                use_lamp=use_lamp, kernel=kernel)
             nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
             return nxt, arena["k"], arena["v"], nsel, nval
 
         def _decode(params, k, v, bt, lengths, tokens, seeds, counts, temps):
             logits, arena, (nsel, nval) = transformer.paged_decode_step(
                 cfg, params, {"k": k, "v": v}, bt, lengths, tokens,
-                use_lamp=use_lamp)
+                use_lamp=use_lamp, kernel=kernel)
             nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
             return nxt, arena["k"], arena["v"], nsel, nval
 
@@ -147,6 +153,10 @@ class LampEngine:
                 "max_prefill_tokens, max_prefill_batch and max_decode_batch "
                 "must all be >= 1 (a zero prefill budget cannot make "
                 "progress)")
+        if econfig.kernel not in ("gather", "pallas"):
+            raise ValueError(
+                f"kernel must be 'gather' or 'pallas', got "
+                f"{econfig.kernel!r}")
         self.cfg = cfg
         self.params = params
         self.econfig = econfig
@@ -182,7 +192,8 @@ class LampEngine:
         self.agg_lamp_selected = 0.0
         self.agg_lamp_valid = 0.0
 
-        self._prefill_fn, self._decode_fn = _jitted_steps(cfg, econfig.use_lamp)
+        self._prefill_fn, self._decode_fn = _jitted_steps(
+            cfg, econfig.use_lamp, econfig.kernel)
 
     # -- request intake -----------------------------------------------------
 

@@ -1,0 +1,332 @@
+"""Differential harness for the fused Pallas paged-attention kernels.
+
+Every test drives the same triangle of implementations over a shared paged
+arena + block tables:
+
+  fused   -- kernels.paged_attention (gather-free, block-table index map)
+  gather  -- the serving reference path: arena[block_tables] materialized,
+             then core.attention.{decode_attention_lamp, attention_lamp}
+  dense   -- the same KV packed into a contiguous per-sequence cache (the
+             PR-1 equivalence anchor)
+
+and asserts outputs agree within float32 softmax roundoff and LAMP
+selection counts match *exactly* (the two-pass kernel recomputes y_low with
+dot_ps-identical rounding, so the look-ahead masks are bit-equal).
+
+Coverage: (block_size, ragged lengths incl. block boundaries, window
+offsets/starts, sliding windows, every LAMP rule + lamp-off), NaN-poisoned
+dead blocks (fully-masked blocks must be skipped, not summed as zeros), a
+hypothesis fuzz over random block tables / lengths (pinned "ci" profile),
+and a seeded fallback walk that runs without hypothesis installed.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import (attention_lamp, attention_reference,
+                                  decode_attention_lamp)
+from repro.core.policy import LampSite
+from repro.kernels import ops
+from repro.kernels.paged_attention import decode_kv_bytes, supports_site
+
+H, HKV, HD = 4, 2, 16
+
+SITES = {
+    "off": LampSite(enabled=False),
+    "relaxed-g0": LampSite(enabled=True, rule="relaxed", mu=7, tau=0.05,
+                           granularity=0),
+    "relaxed-g1": LampSite(enabled=True, rule="relaxed", mu=7, tau=0.1,
+                           granularity=1),
+    "strict-g1": LampSite(enabled=True, rule="strict", mu=7, tau=0.1,
+                          granularity=1),
+    "ln-g0": LampSite(enabled=True, rule="relaxed_ln", mu=7, tau=0.2,
+                      granularity=0, n_ref=64),
+    "rule-none": LampSite(enabled=True, rule="none", mu=5, granularity=0),
+}
+
+TOL = dict(rtol=2e-5, atol=2e-6)
+
+
+def _assert_counts_match(nsel, nsel_ref, site):
+    """Selection counts are bit-exact for the max-based rules (relaxed /
+    relaxed_ln / none / off): the kernel's y_low and running row max are
+    bitwise identical to the reference. The strict rule additionally
+    thresholds on the softmax normalizer l, which the kernel accumulates
+    blockwise while the reference does one materialized sum -- a criterion
+    value landing within an ulp of tau may flip, so strict gets a per-row
+    slack of 1 (a real mask bug shifts counts by far more)."""
+    nsel, nsel_ref = np.asarray(nsel), np.asarray(nsel_ref)
+    if site.enabled and site.rule == "strict":
+        np.testing.assert_allclose(nsel, nsel_ref, atol=1)
+    else:
+        np.testing.assert_array_equal(nsel, nsel_ref)
+
+
+def _repeat_kv(t, n):
+    return jnp.repeat(t, n, axis=1) if n > 1 else t
+
+
+def make_paged(seed, lengths, bs, n_max, *, span=None):
+    """Random arena + per-row block tables. Row r owns ceil(span[r]/bs)
+    distinct shuffled blocks (block 0 stays the null block); the rest of the
+    table is null-padded. span defaults to lengths (decode); prefill passes
+    starts + window width."""
+    rng = np.random.default_rng(seed)
+    R = len(lengths)
+    span = list(lengths) if span is None else list(span)
+    n_blocks = 1 + R * n_max
+    arena_k = jnp.asarray(rng.normal(size=(n_blocks, bs, HKV, HD)) * 1.5,
+                          jnp.float32)
+    arena_v = jnp.asarray(rng.normal(size=(n_blocks, bs, HKV, HD)),
+                          jnp.float32)
+    perm = rng.permutation(np.arange(1, n_blocks))
+    bt = np.zeros((R, n_max), np.int32)
+    for r in range(R):
+        nb = -(-max(int(span[r]), 1) // bs)
+        bt[r, :nb] = perm[r * n_max:r * n_max + nb]
+    return arena_k, arena_v, jnp.asarray(bt)
+
+
+def gathered_heads(arena_k, arena_v, bt):
+    R = bt.shape[0]
+    ks = arena_k[bt].reshape(R, -1, HKV, HD)
+    vs = arena_v[bt].reshape(R, -1, HKV, HD)
+    kh = _repeat_kv(jnp.moveaxis(ks, 2, 1), H // HKV)
+    vh = _repeat_kv(jnp.moveaxis(vs, 2, 1), H // HKV)
+    return kh, vh
+
+
+def check_decode(seed, lengths, bs, n_max, site, *, window=None,
+                 check_dense=False):
+    """Fused decode vs gather (vs dense) on one random paged layout."""
+    arena_k, arena_v, bt = make_paged(seed, lengths, bs, n_max)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    rng = np.random.default_rng(seed + 7)
+    q = jnp.asarray(rng.normal(size=(len(lengths), H, 1, HD)) * 1.5,
+                    jnp.float32)
+
+    out, nsel = ops.paged_decode_attention(q, arena_k, arena_v, bt, lengths,
+                                           site, window=window)
+    kh, vh = gathered_heads(arena_k, arena_v, bt)
+    want, aux = decode_attention_lamp(q, kh, vh, lengths, site,
+                                      window=window, reduce=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+    _assert_counts_match(nsel, aux.n_selected, site)
+    if check_dense:
+        # pack the block walk into a contiguous dense cache: same values at
+        # the same absolute positions -> same reference output
+        dense_k = kh[:, :, :int(jnp.max(lengths))]
+        dense_v = vh[:, :, :int(jnp.max(lengths))]
+        want_d, _ = decode_attention_lamp(q, dense_k, dense_v, lengths, site,
+                                          window=window, reduce=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want_d), **TOL)
+    return out, nsel
+
+
+def check_prefill(seed, starts, bs, n_max, site, *, W=8, window=None,
+                  block_q=None):
+    """Fused windowed prefill vs gather attention_lamp at offsets=starts."""
+    starts = list(starts)
+    span = [s + W for s in starts]
+    arena_k, arena_v, bt = make_paged(seed, span, bs, n_max, span=span)
+    st = jnp.asarray(starts, jnp.int32)
+    rng = np.random.default_rng(seed + 13)
+    q = jnp.asarray(rng.normal(size=(len(starts), H, W, HD)) * 1.5,
+                    jnp.float32)
+
+    out, nsel = ops.paged_prefill_attention(q, arena_k, arena_v, bt, st, site,
+                                            window=window, block_q=block_q)
+    kh, vh = gathered_heads(arena_k, arena_v, bt)
+    if site.enabled:
+        want, aux = attention_lamp(q, kh, vh, site, causal=True,
+                                   window=window, offset=st, reduce=False)
+        _assert_counts_match(nsel, aux.n_selected, site)
+    else:
+        want = attention_reference(q, kh, vh, causal=True, window=window,
+                                   offset=st)
+        np.testing.assert_array_equal(np.asarray(nsel), 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+    return out, nsel
+
+
+# ------------------------------------------------------- differential grid
+
+@pytest.mark.parametrize("site_name", sorted(SITES))
+@pytest.mark.parametrize("bs,lengths", [
+    (4, [3, 9, 16]),          # partial, mid-span, full span
+    (8, [5, 16, 27]),         # partial block / exact boundary / ragged
+])
+def test_decode_differential_grid(bs, lengths, site_name):
+    check_decode(0, lengths, bs, 4, SITES[site_name],
+                 check_dense=site_name == "relaxed-g0")
+
+
+@pytest.mark.parametrize("site_name", sorted(SITES))
+@pytest.mark.parametrize("starts,block_q", [
+    ([0, 5, 17], None),       # fresh prompt / mid-block / deep resume
+    ([0, 8, 23], 4),          # boundary-aligned resume, tiled queries
+])
+def test_prefill_differential_grid(starts, block_q, site_name):
+    check_prefill(1, starts, 8, 4, SITES[site_name], W=8, block_q=block_q)
+
+
+@pytest.mark.parametrize("site_name", ["off", "relaxed-g0"])
+def test_decode_sliding_window(site_name):
+    check_decode(2, [5, 16, 27], 8, 4, SITES[site_name], window=12)
+
+
+@pytest.mark.parametrize("site_name", ["off", "relaxed-g0"])
+def test_prefill_sliding_window(site_name):
+    check_prefill(3, [0, 9, 17], 8, 4, SITES[site_name], W=8, window=12,
+                  block_q=4)
+
+
+# --------------------------------------------------- mask/boundary corners
+
+def test_decode_single_block_sequence():
+    """A sequence living entirely inside one block (n_max-1 dead blocks)."""
+    check_decode(4, [2, 1, 8], 8, 4, SITES["relaxed-g0"], check_dense=True)
+
+
+def test_decode_length_on_block_boundary():
+    check_decode(5, [8, 16, 32], 8, 4, SITES["relaxed-g0"], check_dense=True)
+
+
+def test_decode_last_partial_block():
+    check_decode(6, [9, 17, 31], 8, 4, SITES["strict-g1"], check_dense=True)
+
+
+def test_decode_skips_fully_masked_trailing_block():
+    """Dead table entries point at NaN-poisoned blocks: if the kernel read
+    and 'summed them as zeros', 0 * NaN would poison the accumulator. The
+    clamped index map + pl.when guard must keep the output clean."""
+    bs, n_max = 8, 4
+    lengths = [5, 16, 9]
+    arena_k, arena_v, bt = make_paged(7, lengths, bs, n_max)
+    # point every dead table slot at a real-but-poisoned block
+    poison = arena_k.shape[0] - 1
+    bt = np.asarray(bt).copy()
+    for r, L in enumerate(lengths):
+        bt[r, -(-L // bs):] = poison
+    bt = jnp.asarray(bt)
+    arena_k = arena_k.at[poison].set(jnp.nan)
+    arena_v = arena_v.at[poison].set(jnp.nan)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    rng = np.random.default_rng(8)
+    q = jnp.asarray(rng.normal(size=(3, H, 1, HD)), jnp.float32)
+    out, nsel = ops.paged_decode_attention(q, arena_k, arena_v, bt, lengths,
+                                           SITES["relaxed-g0"])
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(np.asarray(nsel)).all()
+    # and it still equals the clean gather reference over live blocks only
+    clean_k = arena_k.at[poison].set(0.0)
+    clean_v = arena_v.at[poison].set(0.0)
+    kh, vh = gathered_heads(clean_k, clean_v, bt)
+    want, _ = decode_attention_lamp(q, kh, vh, lengths, SITES["relaxed-g0"],
+                                    reduce=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_prefill_skips_blocks_above_causal_bound():
+    """Blocks past a q-tile's causal horizon are dead for that tile; poison
+    the final block and give every row a window that never reaches it."""
+    bs, n_max, W = 8, 4, 8
+    starts = [0, 4, 9]
+    span = [s + W for s in starts]                  # spans end inside blk 0-2
+    arena_k, arena_v, bt = make_paged(9, span, bs, n_max, span=span)
+    poison = arena_k.shape[0] - 1
+    bt = np.asarray(bt).copy()
+    for r, s in enumerate(span):
+        bt[r, -(-s // bs):] = poison                # dead tail entries
+    bt = jnp.asarray(bt)
+    arena_k = arena_k.at[poison].set(jnp.nan)
+    arena_v = arena_v.at[poison].set(jnp.nan)
+    st = jnp.asarray(starts, jnp.int32)
+    rng = np.random.default_rng(10)
+    q = jnp.asarray(rng.normal(size=(3, H, W, HD)), jnp.float32)
+    out, nsel = ops.paged_prefill_attention(q, arena_k, arena_v, bt, st,
+                                            SITES["relaxed-g0"], block_q=4)
+    assert np.isfinite(np.asarray(out)).all()
+    clean_k = arena_k.at[poison].set(0.0)
+    clean_v = arena_v.at[poison].set(0.0)
+    kh, vh = gathered_heads(clean_k, clean_v, bt)
+    want, _ = attention_lamp(q, kh, vh, SITES["relaxed-g0"], causal=True,
+                             offset=st, reduce=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_supports_site_gate():
+    assert supports_site(LampSite(enabled=False, rule="random"))
+    assert not supports_site(LampSite(enabled=True, rule="random"))
+    for name in SITES:
+        assert supports_site(SITES[name])
+
+
+def test_decode_kv_bytes_model():
+    """The traffic model the benchmarks report: fused < gather whenever any
+    row is shorter than the full span, and never more than gather + the
+    look-ahead K re-read."""
+    g, f = decode_kv_bytes([5, 16, 27], n_max=4, block_size=8,
+                           bytes_per_token=64, lamp=True)
+    assert f < g
+    g2, f2 = decode_kv_bytes([32, 32], n_max=4, block_size=8,
+                             bytes_per_token=64, lamp=False)
+    assert f2 == g2          # full spans, no look-ahead pass: traffic parity
+    _, f3 = decode_kv_bytes([32, 32], n_max=4, block_size=8,
+                            bytes_per_token=64, lamp=True)
+    assert f3 == g2 * 3 // 2  # + one K stream for the smax pass
+
+
+# ------------------------------------------------------------ fuzz harness
+
+def _fuzz_decode_case(seed, lengths):
+    check_decode(seed, list(lengths), 4, 4, SITES["relaxed-g0"])
+
+
+def _fuzz_prefill_case(seed, starts):
+    check_prefill(seed, list(starts), 4, 4, SITES["relaxed-g0"], W=4)
+
+
+def test_decode_seeded_fuzz_walk():
+    """Non-hypothesis fallback: a seeded walk over random block tables,
+    ragged lengths, and window offsets (same ops as the hypothesis case)."""
+    rng = np.random.default_rng(42)
+    for _ in range(12):
+        _fuzz_decode_case(int(rng.integers(1 << 16)),
+                          rng.integers(1, 17, size=3))
+        _fuzz_prefill_case(int(rng.integers(1 << 16)),
+                           rng.integers(0, 13, size=3))
+
+
+try:
+    import hypothesis
+    from hypothesis import given, strategies as st
+
+    @given(seed=st.integers(0, 2 ** 16 - 1),
+           lengths=st.lists(st.integers(1, 16), min_size=3, max_size=3))
+    def test_decode_hypothesis_fuzz(seed, lengths):
+        _fuzz_decode_case(seed, lengths)
+
+    @given(seed=st.integers(0, 2 ** 16 - 1),
+           starts=st.lists(st.integers(0, 12), min_size=3, max_size=3))
+    def test_prefill_hypothesis_fuzz(seed, starts):
+        _fuzz_prefill_case(seed, starts)
+
+    @pytest.mark.slow
+    @hypothesis.settings(max_examples=200, deadline=None, derandomize=False,
+                         print_blob=True)
+    @given(seed=st.integers(0, 2 ** 20 - 1),
+           lengths=st.lists(st.integers(1, 32), min_size=2, max_size=4),
+           site_name=st.sampled_from(sorted(SITES)),
+           window=st.sampled_from([None, 8, 20]))
+    def test_decode_deep_fuzz(seed, lengths, site_name, window):
+        """Opt-in random deep fuzz (-m slow): bigger spans, every rule,
+        sliding windows."""
+        # pad the batch so the jit cache stays bounded across examples
+        lengths = (lengths + [1, 1, 1, 1])[:4]
+        check_decode(seed, lengths, 8, 4, SITES[site_name], window=window)
+except ImportError:  # pragma: no cover - hypothesis is optional
+    pass

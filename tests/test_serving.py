@@ -173,6 +173,48 @@ def test_engine_smoke(model, use_lamp):
         assert s["lamp_recompute_rate"] == 0
 
 
+def test_engine_pallas_kernel_differential(model):
+    """End-to-end fused-kernel differential: the same request stream served
+    with kernel="pallas" (fused paged attention, interpret mode on CPU) and
+    kernel="gather" (reference) produces identical tokens and identical
+    per-request LAMP recompute telemetry -- through chunked prefill, prefix
+    sharing, and continuous-batch decode."""
+    cfg, params = model
+    rng = np.random.default_rng(11)
+    shared = _prompt(rng, cfg, 9)   # shared prefix: exercises starts > 0
+    reqs = []
+    for i in range(6):
+        prompt = (shared if i % 2 else []) + _prompt(
+            rng, cfg, int(rng.integers(3, 18)))
+        reqs.append((prompt,
+                     SamplingParams(max_new_tokens=int(rng.integers(2, 7)),
+                                    seed=i)))
+    runs = {}
+    for kernel in ("gather", "pallas"):
+        engine, outs = _run_engine(cfg, params, reqs, kernel=kernel,
+                                   max_prefill_tokens=8)  # force chunking
+        assert len(outs) == len(reqs)
+        runs[kernel] = (outs, engine.stats())
+    g_outs, g_stats = runs["gather"]
+    p_outs, p_stats = runs["pallas"]
+    for i in g_outs:
+        assert p_outs[i].tokens == g_outs[i].tokens
+        # strict-rule selection thresholds on the softmax normalizer, which
+        # the fused kernel accumulates blockwise: allow one ulp-flip of
+        # slack per request (real telemetry bugs diverge by far more)
+        assert abs(p_outs[i].lamp_selected - g_outs[i].lamp_selected) <= 1
+        assert p_outs[i].lamp_valid == g_outs[i].lamp_valid
+    assert abs(p_stats["lamp_recompute_rate"]
+               - g_stats["lamp_recompute_rate"]) < 1e-4
+    assert p_stats["lamp_recompute_rate"] > 0
+
+
+def test_engine_rejects_unknown_kernel(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="kernel"):
+        LampEngine(cfg, params, EngineConfig(kernel="fused"))
+
+
 def test_stop_token_finishes_early(model):
     cfg, params = model
     # greedy decode with stop_token = whatever greedy produces first

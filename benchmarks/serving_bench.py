@@ -28,6 +28,12 @@ interpret mode, so its wall time is NOT TPU performance -- the decisive
 column is bytes moved (the gather path always streams the full
 block-table span; the fused kernel only live blocks).
 
+The speculative section (also standalone via --spec-only, the CI
+spec-decode CSV artifact) replays one decode-heavy greedy stream with LAMP
+self-draft speculative decoding ON and OFF, asserts token identity, and
+reports accepted tokens per decode round (each round replaces that many
+sequential decode steps) plus the verify pass's LAMP recompute rate.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
 """
 
@@ -221,10 +227,78 @@ def bench_kernel_paths(cfg, params, rng, n_requests):
     return saved
 
 
+def run_spec_stream(cfg, params, reqs, *, speculative, draft_len=4,
+                    kernel="gather"):
+    """Decode-heavy stream, all requests admitted up front."""
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, max_model_len=128, max_decode_batch=16,
+        use_lamp=True, kernel=kernel, speculative=speculative,
+        draft_len=draft_len))
+    t0 = time.monotonic()
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    outs = engine.run_to_completion()
+    wall = time.monotonic() - t0
+    s = engine.stats()
+    useful = sum(n for _, n in reqs)
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "wall_s": wall, "useful_tok_per_s": useful / wall,
+            "decode_rounds": s["decode_steps"],
+            "tokens_per_round": (s["spec_tokens_per_round"] if speculative
+                                 else 1.0),
+            "acceptance_rate": s["spec_acceptance_rate"],
+            "verify_recompute_rate": (s["verify_recompute_rate"]
+                                      if speculative
+                                      else s["lamp_recompute_rate"])}
+
+
+def bench_speculative(cfg, params, rng, n_requests, draft_len=4):
+    """LAMP self-draft speculative decoding on a decode-heavy greedy
+    stream: spec-on vs spec-off must be token-identical; reports accepted
+    tokens per decode round (the speedup lever: each round replaces that
+    many sequential decode steps) and the verify pass's LAMP recompute
+    rate vs the per-step rate of plain decoding."""
+    n = max(n_requests, 8)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=20,
+                         min_new=12, max_new=20)
+    for spec in (False, True):
+        # warm with the full stream so the measured runs hit the same
+        # batch-bucket shapes and pay zero jit compilation
+        run_spec_stream(cfg, params, reqs, speculative=spec,
+                        draft_len=draft_len)
+    off = run_spec_stream(cfg, params, reqs, speculative=False)
+    on = run_spec_stream(cfg, params, reqs, speculative=True,
+                         draft_len=draft_len)
+    identical = on["tokens"] == off["tokens"]
+    print(f"serve_spec_off,{off['wall_s']*1e6:.0f},"
+          f"tok/s={off['useful_tok_per_s']:.1f}"
+          f";decode_rounds={off['decode_rounds']}"
+          f";tokens_per_round=1.00"
+          f";lamp_rate={off['verify_recompute_rate']:.4f}")
+    print(f"serve_spec_on,{on['wall_s']*1e6:.0f},"
+          f"tok/s={on['useful_tok_per_s']:.1f}"
+          f";decode_rounds={on['decode_rounds']}"
+          f";tokens_per_round={on['tokens_per_round']:.2f}"
+          f";acceptance_rate={on['acceptance_rate']:.3f}"
+          f";verify_lamp_rate={on['verify_recompute_rate']:.4f}")
+    rounds_saved = 1 - on["decode_rounds"] / max(1, off["decode_rounds"])
+    print(f"serve_spec_vs_base,0,outputs_identical={identical}"
+          f";rounds_saved={rounds_saved:.1%}"
+          f";accepted_per_step={on['tokens_per_round']:.2f}")
+    if not identical:
+        raise SystemExit("speculative outputs diverged from baseline")
+    if on["tokens_per_round"] <= 1.0:
+        raise SystemExit("speculative decoding emitted <= 1 token per round")
+    return on
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spec-only", action="store_true",
+                    help="run only the speculative-decoding section (the "
+                         "CI spec-decode CSV artifact)")
     args = ap.parse_args()
 
     cfg = reduce_cfg(get_config("gpt2"))
@@ -233,6 +307,9 @@ def main():
     reqs = make_requests(rng, cfg, args.requests)
 
     print("name,us_per_call,derived")
+    if args.spec_only:
+        bench_speculative(cfg, params, rng, args.requests)
+        return
     results = {}
     for mode in ("static", "engine"):
         for use_lamp in (False, True):
@@ -262,6 +339,8 @@ def main():
     bench_prefix_cache(cfg, params, rng, args.requests)
 
     bench_kernel_paths(cfg, params, rng, args.requests)
+
+    bench_speculative(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

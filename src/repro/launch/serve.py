@@ -44,7 +44,8 @@ def build_stream(rng: np.random.Generator, args, vocab: int):
         new = int(rng.integers(args.min_new, args.max_new + 1))
         prompt = shared + rng.integers(0, vocab, size=plen).tolist()
         sampling = SamplingParams(max_new_tokens=new,
-                                  temperature=args.temperature, seed=i)
+                                  temperature=args.temperature, seed=i,
+                                  top_k=args.top_k)
         reqs.append((float(arrivals[i]), prompt, sampling))
     return reqs
 
@@ -84,6 +85,19 @@ def main():
                          "block-table span (reference); 'pallas' fuses the "
                          "block gather into the attention kernel (fast path "
                          "on TPU; interpret mode on CPU)")
+    ap.add_argument("--speculative", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="LAMP self-draft speculative decoding: draft with "
+                         "the pure low-precision forward (rule 'none'), "
+                         "verify all drafted positions in one multi-token "
+                         "LAMP forward (greedy outputs identical to "
+                         "non-speculative decoding)")
+    ap.add_argument("--draft-len", type=int, default=4,
+                    help="speculative draft tokens per sequence per round")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the top-k logits only (0 = "
+                         "unfiltered); also the filter the speculative "
+                         "accept rule scores against")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-lamp", action="store_true")
     args = ap.parse_args()
@@ -108,7 +122,8 @@ def main():
         max_prefill_tokens=args.max_prefill_tokens,
         prefix_cache=args.prefix_cache,
         chunked_prefill=args.chunked_prefill,
-        kernel=args.kernel))
+        kernel=args.kernel, speculative=args.speculative,
+        draft_len=args.draft_len))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -159,6 +174,13 @@ def main():
           f"{s['prefill_chunks']} prefill chunks")
     print(f"[serve] LAMP recompute rate: aggregate "
           f"{s['lamp_recompute_rate']:.4f}, per-request mean {mean_rate:.4f}")
+    if args.speculative:
+        acc = [o.spec_acceptance_rate for o in outputs if o.spec_drafted]
+        print(f"[serve] speculative: {s['spec_rounds']} rounds, "
+              f"acceptance {s['spec_acceptance_rate']:.2%} "
+              f"(per-request mean {np.mean(acc) if acc else 0.0:.2%}), "
+              f"{s['spec_tokens_per_round']:.2f} tokens/round, "
+              f"verify recompute rate {s['verify_recompute_rate']:.4f}")
 
 
 if __name__ == "__main__":

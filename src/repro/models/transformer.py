@@ -382,6 +382,50 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
     meaningful for rows whose window completes the prompt) and LAMP counts
     covering the KQ products actually computed in this window.
     """
+    B = tokens.shape[0]
+    x, arena, counts = _paged_window_apply(
+        cfg, params, tokens, arena, block_tables, starts, lengths,
+        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel)
+    x_last = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
+    logits = LY.unembed(cfg, params["embed"], x_last)
+    return logits, arena, counts
+
+
+def paged_verify_window(cfg, params, tokens: jnp.ndarray,
+                        arena: Dict[str, Any], block_tables: jnp.ndarray,
+                        starts: jnp.ndarray, lengths: jnp.ndarray, *,
+                        use_lamp: bool = True, moe_groups: int = 1,
+                        kernel: str = "gather"):
+    """Multi-query decode-verify step: the speculative verifier.
+
+    Identical computation to `paged_prefill_window` -- row b runs `tokens`
+    at absolute positions starts[b] .. starts[b] + lengths[b] - 1 against
+    its block table, (re)writing the window's KV into the arena -- but
+    returns logits for *every* window position (B, W, V) instead of only
+    the last valid one, so the caller can score all k drafted tokens plus
+    the bonus position in one batched forward pass. Because the windowed
+    path is row-wise over a constant gathered key width (gather) or an
+    equivalent fused kernel (pallas), position j's logits are exactly what
+    a non-speculative decode step at that position would have produced, and
+    the rewritten KV is the selective-recompute-quality KV the plain decode
+    path would have cached.
+
+    Returns (logits (B, W, V) float32, arena,
+    (n_selected (B,), n_valid (B,))). Logits at positions >= lengths[b]
+    are computed over padded queries and must be ignored.
+    """
+    x, arena, counts = _paged_window_apply(
+        cfg, params, tokens, arena, block_tables, starts, lengths,
+        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel)
+    logits = LY.unembed(cfg, params["embed"], x)
+    return logits, arena, counts
+
+
+def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
+                        lengths, *, use_lamp, moe_groups, kernel):
+    """Shared window forward: runs the block stack over one window per row
+    and returns the final-norm hidden states (B, W, d), the updated arena,
+    and per-row LAMP (n_selected, n_valid) summed over layers."""
     B, W = tokens.shape
     n_max = block_tables.shape[1]
     bs = arena["k"].shape[2]
@@ -455,10 +499,8 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
         x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
     else:
         x = LY.rms_norm(x, params["lnf_w"])
-    x_last = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
-    logits = LY.unembed(cfg, params["embed"], x_last)
-    return logits, {"k": ks, "v": vs}, (jnp.sum(nsel, axis=0),
-                                        jnp.sum(nval, axis=0))
+    return x, {"k": ks, "v": vs}, (jnp.sum(nsel, axis=0),
+                                   jnp.sum(nval, axis=0))
 
 
 def paged_decode_step(cfg, params, arena: Dict[str, Any],

@@ -27,12 +27,16 @@ class ServeConfig:
     seed: int = 0
     use_lamp: bool = True
     cache_len: int = 512
+    top_k: int = 0               # 0 = unfiltered
 
 
-def _sample(logits, key, temperature):
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1)
-    return jax.random.categorical(key, logits / temperature, axis=-1)
+def _sample(logits, key, temperature, top_k: int = 0):
+    """Routed through the shared serving sampler so this loop and the
+    continuous-batching engine cannot diverge on temperature/top-k
+    semantics again (greedy at temp <= 0, Gumbel-max otherwise -- the
+    Gumbel-max draw is bit-identical to the categorical() this used)."""
+    from repro.serving import sampling
+    return sampling.sample(logits, key, temperature, top_k=top_k)
 
 
 # jitted decode closures keyed on (cfg, use_lamp): repeated generate() calls
@@ -63,13 +67,15 @@ def generate(cfg, params, batch: Dict[str, Any], serve: ServeConfig,
     decode = decode_fn(cfg, serve.use_lamp)
 
     key, sub = jax.random.split(key)
-    toks = _sample(logits[:, -1], sub, serve.temperature)[:, None]
+    toks = _sample(logits[:, -1], sub, serve.temperature,
+                   serve.top_k)[:, None]
     out = [toks]
     t0 = time.monotonic()
     for i in range(serve.max_new_tokens - 1):
         key, sub = jax.random.split(key)
         logits, cache = decode(params, cache, toks)
-        toks = _sample(logits[:, -1], sub, serve.temperature)[:, None]
+        toks = _sample(logits[:, -1], sub, serve.temperature,
+                       serve.top_k)[:, None]
         out.append(toks)
     decode_s = time.monotonic() - t0
     tokens = jnp.concatenate(out, axis=1)

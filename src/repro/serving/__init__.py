@@ -13,14 +13,22 @@ vLLM-style serving architecture over the repro model stack:
   engine.py    -- the step loop: add_request() / step() / stream outputs,
                   cached jitted (windowed) prefill+decode, per-request LAMP
                   and prefix-cache telemetry
+  sampling.py  -- shared Gumbel-max sampling primitives (per-request keyed
+                  streams, top-k filtering) used by the engine, the
+                  static-batch loop, and the speculative accept rule
+  speculative.py -- LAMP self-draft speculative decoding: low-precision
+                  drafter (rule "none") + selective-recompute verifier over
+                  the paged pool, standard accept/residual-resample rule
 """
 
 from .engine import EngineConfig, LampEngine, RequestOutput
 from .kv_pool import PagedKVPool
 from .request import SamplingParams, Sequence, SequenceStatus
 from .scheduler import Scheduler, StepPlan
+from .speculative import SpecConfig
 
 __all__ = [
     "EngineConfig", "LampEngine", "RequestOutput", "PagedKVPool",
     "SamplingParams", "Sequence", "SequenceStatus", "Scheduler", "StepPlan",
+    "SpecConfig",
 ]

@@ -38,9 +38,11 @@ import numpy as np
 
 from repro.models import transformer
 
+from . import sampling
 from .kv_pool import PagedKVPool
 from .request import SamplingParams, Sequence, SequenceStatus
 from .scheduler import Scheduler
+from .speculative import SpecConfig, spec_step_fns
 
 # families the paged-KV engine can serve (no per-request side inputs, no
 # state-space cache); launchers use this to filter the arch registry.
@@ -69,6 +71,14 @@ class EngineConfig:
     # through the block-table index map, masked blocks skipped) -- the fast
     # path on TPU, interpret mode on CPU
     kernel: str = "gather"
+    # LAMP self-draft speculative decoding: decode rounds draft `draft_len`
+    # tokens per sequence with the pure low-precision forward (LAMP rule
+    # "none"), then verify all draft_len+1 positions in one multi-token
+    # paged forward with the configured LAMP rule. Greedy outputs are
+    # bit-identical to non-speculative decoding; sampled outputs follow the
+    # same distribution (standard accept/residual-resample rule).
+    speculative: bool = False
+    draft_len: int = 4
 
 
 @dataclasses.dataclass
@@ -83,10 +93,17 @@ class RequestOutput:
     lamp_selected: float
     lamp_valid: float
     num_cached_tokens: int = 0      # prompt tokens served from prefix cache
+    spec_drafted: int = 0           # tokens drafted for this request
+    spec_accepted: int = 0          # drafted tokens the verifier accepted
 
     @property
     def lamp_recompute_rate(self) -> float:
         return self.lamp_selected / self.lamp_valid if self.lamp_valid else 0.0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -96,41 +113,40 @@ def _bucket(n: int, cap: int) -> int:
     return min(b, cap) if cap else b
 
 
-def _sample_rows(logits, seeds, counts, temps):
-    """Per-row sampling: greedy at temp<=0, Gumbel-max otherwise. The key is
-    derived from (request seed, tokens generated so far) only."""
-    def one(lg, s, c, t):
-        key = jax.random.fold_in(jax.random.PRNGKey(s), c)
-        g = jax.random.gumbel(key, lg.shape)
-        samp = jnp.argmax(lg / jnp.maximum(t, 1e-6) + g)
-        return jnp.where(t > 0, samp, jnp.argmax(lg))
-    return jax.vmap(one)(logits, seeds, counts, temps)
-
-
 # jitted step functions keyed on (cfg, use_lamp), shared across engine
 # instances so re-instantiation (benchmarks, tests) never recompiles. The KV
 # arenas are donated: the per-step .at[].set() updates alias the pool buffers
-# in place instead of copying the whole arena every token.
+# in place instead of copying the whole arena every token. Sampling routes
+# through the shared serving/sampling.py primitives (same key schedule as
+# before: fold_in(PRNGKey(seed), num_generated)).
 _JIT_CACHE: Dict[Any, Any] = {}
 
 
-def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather"):
-    key = (cfg, use_lamp, kernel)
+def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
+                  use_topk: bool = False):
+    """`use_topk` is a static trace-time switch: the per-row top-k filter
+    needs a vocab sort per row per step, so batches where every request has
+    top_k == 0 (the common case) use the variant that skips it entirely.
+    At most two variants compile per (cfg, use_lamp, kernel)."""
+    key = (cfg, use_lamp, kernel, use_topk)
     fns = _JIT_CACHE.get(key)
     if fns is None:
         def _prefill(params, k, v, tokens, bt, starts, lengths, seeds,
-                     counts, temps):
+                     counts, temps, topks):
             logits, arena, (nsel, nval) = transformer.paged_prefill_window(
                 cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
                 use_lamp=use_lamp, kernel=kernel)
-            nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
+            nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
+                                       top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
 
-        def _decode(params, k, v, bt, lengths, tokens, seeds, counts, temps):
+        def _decode(params, k, v, bt, lengths, tokens, seeds, counts, temps,
+                    topks):
             logits, arena, (nsel, nval) = transformer.paged_decode_step(
                 cfg, params, {"k": k, "v": v}, bt, lengths, tokens,
                 use_lamp=use_lamp, kernel=kernel)
-            nxt = _sample_rows(logits[:, -1], seeds, counts, temps)
+            nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
+                                       top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
 
         fns = (jax.jit(_prefill, donate_argnums=(1, 2)),
@@ -157,6 +173,10 @@ class LampEngine:
             raise ValueError(
                 f"kernel must be 'gather' or 'pallas', got "
                 f"{econfig.kernel!r}")
+        if econfig.speculative and econfig.draft_len < 1:
+            raise ValueError(
+                f"speculative decoding needs draft_len >= 1, got "
+                f"{econfig.draft_len}")
         self.cfg = cfg
         self.params = params
         self.econfig = econfig
@@ -177,7 +197,8 @@ class LampEngine:
             self.pool, max_prefill_batch=econfig.max_prefill_batch,
             max_prefill_tokens=econfig.max_prefill_tokens,
             max_decode_batch=econfig.max_decode_batch,
-            chunked_prefill=econfig.chunked_prefill)
+            chunked_prefill=econfig.chunked_prefill,
+            spec_draft_len=econfig.draft_len if econfig.speculative else 0)
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: List[RequestOutput] = []
@@ -191,9 +212,31 @@ class LampEngine:
         self.generated_tokens = 0
         self.agg_lamp_selected = 0.0
         self.agg_lamp_valid = 0.0
+        # speculative-decoding telemetry
+        self.spec_rounds = 0            # decode rounds run speculatively
+        self.spec_drafted = 0           # draft tokens proposed
+        self.spec_accepted = 0          # draft tokens the verifier accepted
+        self.spec_emitted = 0           # tokens emitted by spec rounds
+        self.spec_verify_selected = 0.0  # LAMP counts of the verify passes
+        self.spec_verify_valid = 0.0
 
-        self._prefill_fn, self._decode_fn = _jitted_steps(
-            cfg, econfig.use_lamp, econfig.kernel)
+        self.spec_config = (SpecConfig(draft_len=econfig.draft_len)
+                            if econfig.speculative else None)
+
+    # step functions resolve per batch: `use_topk` selects the jit variant
+    # with/without the per-row top-k vocab sort (global caches dedupe, so
+    # at most two variants compile per step kind)
+
+    def _step_fns(self, seqs: List[Sequence]):
+        use_topk = any(s.sampling.top_k > 0 for s in seqs)
+        return _jitted_steps(self.cfg, self.econfig.use_lamp,
+                             self.econfig.kernel, use_topk)
+
+    def _spec_fns(self, seqs: List[Sequence]):
+        use_topk = any(s.sampling.top_k > 0 for s in seqs)
+        return spec_step_fns(self.cfg, self.econfig.use_lamp,
+                             self.econfig.kernel, self.spec_config,
+                             use_topk)
 
     # -- request intake -----------------------------------------------------
 
@@ -234,7 +277,13 @@ class LampEngine:
         if plan.kind == "prefill":
             self._step_prefill(plan.seqs, plan.windows)
             self.prefill_steps += 1
+        elif self.econfig.speculative and any(plan.draft_lens):
+            self._step_spec(plan.seqs, plan.draft_lens)
+            self.decode_steps += 1
         else:
+            # no draft budget anywhere (spec off, block pressure shed it,
+            # or every sequence is at its token limit): the plain decode
+            # step is the same progress at a fraction of the compute
             self._step_decode(plan.seqs)
             self.decode_steps += 1
         self.total_steps += 1
@@ -246,12 +295,14 @@ class LampEngine:
         seeds = np.zeros((Bb,), np.int32)
         counts = np.zeros((Bb,), np.int32)
         temps = np.zeros((Bb,), np.float32)
+        topks = np.zeros((Bb,), np.int32)
         for i, seq in enumerate(seqs):
             bt[i, :len(seq.block_ids)] = seq.block_ids
             seeds[i] = seq.sampling.seed
             counts[i] = seq.num_generated
             temps[i] = seq.sampling.temperature
-        return bt, seeds, counts, temps
+            topks[i] = seq.sampling.top_k
+        return bt, seeds, counts, temps, topks
 
     def _step_prefill(self, seqs: List[Sequence],
                       windows: List[int]) -> None:
@@ -269,11 +320,13 @@ class LampEngine:
             tokens[i, :w] = seq.prefill_tokens()[cur:cur + w]
             starts[i] = cur
             lengths[i] = w
-        bt, seeds, counts, temps = self._batch_arrays(seqs, Bb)
-        nxt, self.pool.k, self.pool.v, nsel, nval = self._prefill_fn(
+        bt, seeds, counts, temps, topks = self._batch_arrays(seqs, Bb)
+        prefill_fn, _ = self._step_fns(seqs)
+        nxt, self.pool.k, self.pool.v, nsel, nval = prefill_fn(
             self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
             jnp.asarray(bt), jnp.asarray(starts), jnp.asarray(lengths),
-            jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps))
+            jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
+            jnp.asarray(topks))
         nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
                            np.asarray(nval))
         now = time.monotonic()
@@ -305,11 +358,12 @@ class LampEngine:
         for i, seq in enumerate(seqs):
             tokens[i, 0] = seq.last_token
             lengths[i] = seq.cache_len
-        bt, seeds, counts, temps = self._batch_arrays(seqs, Rb)
-        nxt, self.pool.k, self.pool.v, nsel, nval = self._decode_fn(
+        bt, seeds, counts, temps, topks = self._batch_arrays(seqs, Rb)
+        _, decode_fn = self._step_fns(seqs)
+        nxt, self.pool.k, self.pool.v, nsel, nval = decode_fn(
             self.params, self.pool.k, self.pool.v, jnp.asarray(bt),
             jnp.asarray(lengths), jnp.asarray(tokens), jnp.asarray(seeds),
-            jnp.asarray(counts), jnp.asarray(temps))
+            jnp.asarray(counts), jnp.asarray(temps), jnp.asarray(topks))
         nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
                            np.asarray(nval))
         now = time.monotonic()
@@ -320,6 +374,63 @@ class LampEngine:
             self.agg_lamp_valid += float(nval[i])
             seq.on_token(int(nxt[i]), now)
             self.generated_tokens += 1
+
+    def _step_spec(self, seqs: List[Sequence],
+                   draft_lens: List[int]) -> None:
+        """One speculative round over the decode batch: draft up to
+        `draft_lens[i]` tokens per sequence with the low-precision
+        self-draft, verify every drafted position (plus the bonus slot) in
+        one multi-token LAMP forward, emit the accepted prefix + one
+        verifier token, and roll back the blocks that held rejected draft
+        KV. A sequence with draft budget 0 runs a verify-only round, which
+        is exactly one plain decode step's progress."""
+        Rb = _bucket(len(seqs), self.econfig.max_decode_batch)
+        tok0 = np.zeros((Rb,), np.int32)
+        lengths = np.zeros((Rb,), np.int32)  # pad rows write into null block
+        kd = np.zeros((Rb,), np.int32)
+        for i, seq in enumerate(seqs):
+            tok0[i] = seq.last_token
+            lengths[i] = seq.cache_len
+            kd[i] = draft_lens[i]
+        bt, seeds, counts, temps, topks = self._batch_arrays(seqs, Rb)
+        bt, lengths, tok0, kd, seeds, counts, temps, topks = map(
+            jnp.asarray, (bt, lengths, tok0, kd, seeds, counts, temps,
+                          topks))
+        draft_fn, verify_fn = self._spec_fns(seqs)
+        d_toks, d_logits, self.pool.k, self.pool.v = draft_fn(
+            self.params, self.pool.k, self.pool.v, bt, lengths, tok0, kd,
+            seeds, counts, temps, topks)
+        emit, n_acc, self.pool.k, self.pool.v, nsel, nval = verify_fn(
+            self.params, self.pool.k, self.pool.v, tok0, d_toks, d_logits,
+            bt, lengths, kd, seeds, counts, temps, topks)
+        emit, n_acc, nsel, nval = (np.asarray(emit), np.asarray(n_acc),
+                                   np.asarray(nsel), np.asarray(nval))
+        now = time.monotonic()
+        self.spec_rounds += 1
+        for i, seq in enumerate(seqs):
+            a = int(n_acc[i])
+            seq.lamp.add(nsel[i], nval[i])
+            self.agg_lamp_selected += float(nsel[i])
+            self.agg_lamp_valid += float(nval[i])
+            self.spec_verify_selected += float(nsel[i])
+            self.spec_verify_valid += float(nval[i])
+            seq.spec_drafted += int(draft_lens[i])
+            seq.spec_accepted += a
+            self.spec_drafted += int(draft_lens[i])
+            self.spec_accepted += a
+            # emit accepted drafts + the verifier's token, stopping at the
+            # request's own limits (surplus accepted tokens are dropped and
+            # their cache rolls back with the rejected ones)
+            appended = 0
+            for t in emit[i, :a + 1]:
+                seq.on_token(int(t), now)
+                appended += 1
+                self.generated_tokens += 1
+                if seq.should_stop():
+                    break
+            seq.cache_len += appended
+            self.spec_emitted += appended
+            seq.block_ids = self.pool.rollback(seq.block_ids, seq.cache_len)
 
     def _collect_finished(self, seqs: List[Sequence]) -> List[RequestOutput]:
         done = []
@@ -335,7 +446,9 @@ class LampEngine:
                 finish_reason=reason, latency=seq.latency(),
                 ttft=seq.ttft(), num_preemptions=seq.num_preemptions,
                 lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid,
-                num_cached_tokens=seq.num_cached_tokens)
+                num_cached_tokens=seq.num_cached_tokens,
+                spec_drafted=seq.spec_drafted,
+                spec_accepted=seq.spec_accepted)
             self._finished.append(out)
             done.append(out)
         return done
@@ -383,13 +496,36 @@ class LampEngine:
             "lamp_recompute_rate": (self.agg_lamp_selected /
                                     self.agg_lamp_valid
                                     if self.agg_lamp_valid else 0.0),
+            # hung-stream visibility: requests still queued or running
+            "live_requests": (len(self.scheduler.waiting)
+                              + len(self.scheduler.running)),
+            # speculative decoding
+            "spec_rounds": self.spec_rounds,
+            "spec_drafted_tokens": self.spec_drafted,
+            "spec_accepted_tokens": self.spec_accepted,
+            "spec_acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                     if self.spec_drafted else 0.0),
+            "spec_tokens_per_round": (self.spec_emitted / self.spec_rounds
+                                      if self.spec_rounds else 0.0),
+            "verify_recompute_rate": (self.spec_verify_selected /
+                                      self.spec_verify_valid
+                                      if self.spec_verify_valid else 0.0),
         }
 
     def run_to_completion(self, max_steps: int = 100000) -> List[RequestOutput]:
-        """Drive step() until every queued request finishes."""
+        """Drive step() until every queued request finishes.
+
+        Raises RuntimeError when `max_steps` elapse with requests still
+        live, so a hung stream (scheduler stall, runaway generation) is
+        loud instead of silently dropping requests; stats()["live_requests"]
+        exposes the same condition to pollers."""
         out: List[RequestOutput] = []
         for _ in range(max_steps):
             if not self.has_unfinished():
                 return out
             out.extend(self.step())
-        raise RuntimeError("run_to_completion exceeded max_steps")
+        live = self.stats()["live_requests"]
+        raise RuntimeError(
+            f"run_to_completion exceeded max_steps={max_steps} with {live} "
+            f"request(s) still live ({len(self._finished)} finished); the "
+            f"stream is hung or max_steps is too small")

@@ -262,6 +262,36 @@ class PagedKVPool:
         self.cow_copies += 1
         return new
 
+    def rollback(self, block_ids: Seq[int], n_tokens: int) -> List[int]:
+        """Truncate a sequence's block list to cover exactly `n_tokens`
+        cached positions, freeing the surplus tail blocks (speculative
+        decoding rolls back the blocks that held rejected draft KV).
+
+        Safety properties:
+          * freeing is refcount-decrement only -- a rolled-back block that
+            other sequences share (or that the prefix index still maps)
+            keeps its arena contents untouched, exactly like `free_blocks`;
+          * if the kept tail block is partially filled (the sequence's next
+            write lands inside it) and is shared or registered, it is
+            copied on write here, so post-rollback writes can never mutate
+            a shared or indexed block;
+          * tail blocks are freed deepest-first so the cached-free LRU
+            evicts chain tails before the heads other prefixes need.
+
+        Returns the new (kept) block list; the surplus must not be freed
+        again by the caller.
+        """
+        keep = self.blocks_for(n_tokens)
+        if keep > len(block_ids):
+            raise ValueError(
+                f"rollback to {n_tokens} tokens needs {keep} blocks but the "
+                f"sequence owns only {len(block_ids)}")
+        kept = list(block_ids[:keep])
+        self.free_blocks(reversed(list(block_ids[keep:])))
+        if n_tokens % self.block_size and kept and self.needs_cow(kept[-1]):
+            kept[-1] = self.copy_on_write(kept[-1])
+        return kept
+
     def needs_cow(self, b: int) -> bool:
         return self.refcount.get(b, 0) > 1 or b in self._block_to_hash
 

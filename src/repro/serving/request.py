@@ -29,6 +29,9 @@ class SamplingParams:
     temperature: float = 0.0        # 0 = greedy
     seed: int = 0                   # per-request sampling stream
     stop_token: Optional[int] = None
+    top_k: int = 0                  # 0 = unfiltered; else sample from the
+                                    # top-k logits only (also the filter the
+                                    # speculative accept rule scores against)
 
 
 @dataclasses.dataclass
@@ -71,6 +74,10 @@ class Sequence:
         # per-chunk registration does not rehash the whole prefix
         self.prefix_hashes: List[int] = []
         self.num_preemptions = 0
+        # speculative-decoding cursors: tokens this request drafted and how
+        # many of those drafts the verifier accepted (across all rounds)
+        self.spec_drafted = 0
+        self.spec_accepted = 0
         self.first_token_time: Optional[float] = None
         self.finish_time: Optional[float] = None
         self.finish_reason: Optional[str] = None
@@ -107,6 +114,12 @@ class Sequence:
     def total_len(self) -> int:
         """Max cache positions this request can ever need."""
         return len(self.prompt) + self.sampling.max_new_tokens
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the verifier accepted (in [0, 1])."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
 
     def on_token(self, token: int, now: float) -> None:
         if self.first_token_time is None:

@@ -1,0 +1,127 @@
+"""Shared token-sampling primitives for every serving path.
+
+One Gumbel-max core serves both samplers so the two serving stacks cannot
+drift apart again (they used to: the batch loop divided by a raw, possibly
+zero temperature behind a Python branch while the engine clamped it inside
+the graph):
+
+  * ``sample`` -- single-key batch sampling (the static-batch
+    ``runtime.serve_loop`` path): one PRNG key for the whole batch, a
+    Python-level temperature (greedy at ``t <= 0``).
+  * ``sample_rows`` -- per-row keyed sampling (the continuous-batching
+    engine): each row's key derives from ``(request seed, tokens generated
+    so far[, salt])`` only, so a request's sample stream is deterministic
+    regardless of batching, bucketing, or preemption. Temperatures are
+    per-row arrays resolved inside the graph.
+
+Both accept ``top_k``: logits outside the top-k are masked to -inf before
+sampling (0 disables). ``sample_rows`` takes *per-row* top-k values so one
+continuous batch can mix filtered and unfiltered requests; the filter is
+exact under jit (dynamic kth-threshold via a per-row sort).
+
+The speculative-decoding verifier reuses ``apply_top_k_rows`` so the
+residual-resampling acceptance rule sees exactly the filtered distributions
+the drafter and the non-speculative sampler would have sampled from.
+
+Salts: one request consumes several independent draws per position under
+speculative decoding (draft proposal, acceptance uniform, residual
+resample). Each caller folds a distinct ``salt`` into the key so the draws
+never collide with each other or with the plain sampler (salt 0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# key salts (folded after the position counter; 0 = the plain sampler)
+SALT_SAMPLE = 0
+SALT_DRAFT = 1
+SALT_ACCEPT = 2
+SALT_RESIDUAL = 3
+
+
+def apply_top_k(logits: jnp.ndarray, top_k: int) -> jnp.ndarray:
+    """Static (whole-batch) top-k filter: entries below the kth-largest
+    logit go to -inf. ``top_k <= 0`` or ``>= vocab`` is the identity."""
+    V = logits.shape[-1]
+    if top_k <= 0 or top_k >= V:
+        return logits
+    kth = jnp.sort(logits, axis=-1)[..., V - top_k][..., None]
+    return jnp.where(logits >= kth, logits, -jnp.inf)
+
+
+def apply_top_k_rows(logits: jnp.ndarray, top_k: jnp.ndarray) -> jnp.ndarray:
+    """Per-row top-k filter under jit. logits (R, ..., V); top_k (R,) int32,
+    0 = unfiltered for that row. Rows keep every logit tied with the kth
+    largest (the same semantics as the static filter)."""
+    V = logits.shape[-1]
+    srt = jnp.sort(logits, axis=-1)
+    k = jnp.clip(top_k, 1, V)
+    k = k.reshape(k.shape + (1,) * (logits.ndim - 1))
+    kth = jnp.take_along_axis(srt, V - k, axis=-1)
+    filtered = jnp.where(logits >= kth, logits, -jnp.inf)
+    on = (top_k > 0).reshape(k.shape)
+    return jnp.where(on, filtered, logits)
+
+
+def row_key(seed, count, salt: int = SALT_SAMPLE):
+    """The engine's per-request key schedule: fold the position counter into
+    the request seed, then the caller's salt. ``SALT_SAMPLE`` skips the salt
+    fold and reproduces the pre-speculative engine schedule bit-for-bit;
+    the speculative salts derive disjoint streams from the same base key."""
+    k = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+    if salt == SALT_SAMPLE:
+        return k
+    return jax.random.fold_in(k, salt)
+
+
+def _gumbel_argmax(lg, key, t):
+    """Greedy at t <= 0, Gumbel-max otherwise; t is resolved in-graph."""
+    g = jax.random.gumbel(key, lg.shape)
+    samp = jnp.argmax(lg / jnp.maximum(t, 1e-6) + g)
+    return jnp.where(t > 0, samp, jnp.argmax(lg))
+
+
+def sample_rows(logits, seeds, counts, temps, top_k=None,
+                salt: int = SALT_SAMPLE):
+    """Per-row sampling: greedy at temp<=0, Gumbel-max otherwise. The key is
+    derived from (request seed, tokens generated so far, salt) only.
+    logits (R, V); seeds/counts int32 (R,); temps float32 (R,); top_k
+    optional int32 (R,) (None/0 = unfiltered)."""
+    if top_k is not None:
+        logits = apply_top_k_rows(logits, top_k)
+
+    def one(lg, s, c, t):
+        return _gumbel_argmax(lg, row_key(s, c, salt), t)
+
+    return jax.vmap(one)(logits, seeds, counts, temps)
+
+
+def sample(logits, key, temperature: float, top_k: int = 0):
+    """Single-key batch sampling (static-batch loop): logits (..., V), one
+    PRNG key, Python-level temperature (greedy at <= 0)."""
+    logits = apply_top_k(logits, top_k)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    g = jax.random.gumbel(key, logits.shape)
+    return jnp.argmax(logits / temperature + g, axis=-1)
+
+
+def row_uniforms(seeds, counts, salt: int):
+    """One uniform draw per (row, count) keyed on (seed, count, salt) -- the
+    speculative acceptance coin flips. seeds (R,); counts (R,) or (R, k)."""
+    def one(s, c):
+        return jax.random.uniform(row_key(s, c, salt), ())
+    if jnp.ndim(counts) == 2:
+        return jax.vmap(lambda s, cs: jax.vmap(lambda c: one(s, c))(cs))(
+            seeds, counts)
+    return jax.vmap(one)(seeds, counts)
+
+
+def row_gumbel(seeds, counts, salt: int, shape):
+    """One Gumbel vector of ``shape`` per row keyed on (seed, count, salt)
+    -- the speculative residual resample."""
+    def one(s, c):
+        return jax.random.gumbel(row_key(s, c, salt), shape)
+    return jax.vmap(one)(seeds, counts)

@@ -25,6 +25,14 @@ Policy (vLLM-v0 style, adapted to the fixed-shape jit constraint):
     generated tokens kept). A preempted sequence's filled full blocks are
     registered in the prefix index first, so -- capacity permitting -- its
     resume re-prefills only the un-cached suffix.
+  * Speculative decoding (`spec_draft_len` > 0): each decode round grants a
+    per-sequence draft budget, oldest-first, accounted against the prefill
+    token budget (the verify pass is a (kd+1)-token windowed forward, the
+    same compute shape as a prefill chunk) and capped by the sequence's own
+    token limit. Block demand covers the whole speculative span
+    (cache_len .. cache_len + kd); under pressure the scheduler sheds draft
+    lookahead before preempting anyone -- kd = 0 degrades a round to a
+    plain decode step, so speculation can never deadlock the pool.
 
 Progress guarantee: the engine validates that the pool can hold at least one
 maximal sequence, so a lone running sequence can always allocate its next
@@ -48,17 +56,21 @@ class StepPlan:
     # prefill only: tokens of prefill_tokens() each sequence runs this step,
     # starting at its prefill_cursor
     windows: Optional[List[int]] = None
+    # decode only, speculative engines: tokens each sequence may draft this
+    # round (0 = plain decode / verify-only)
+    draft_lens: Optional[List[int]] = None
 
 
 class Scheduler:
     def __init__(self, pool: PagedKVPool, *, max_prefill_batch: int = 8,
                  max_prefill_tokens: int = 2048, max_decode_batch: int = 32,
-                 chunked_prefill: bool = False):
+                 chunked_prefill: bool = False, spec_draft_len: int = 0):
         self.pool = pool
         self.max_prefill_batch = max_prefill_batch
         self.max_prefill_tokens = max_prefill_tokens
         self.max_decode_batch = max_decode_batch
         self.chunked_prefill = chunked_prefill
+        self.spec_draft_len = spec_draft_len
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self.num_preemptions = 0
@@ -218,6 +230,27 @@ class Scheduler:
                 self.running.append(seq)
         return StepPlan("prefill", batch, windows)
 
+    def _grant_draft_budgets(self, batch: List[Sequence]) -> List[int]:
+        """Per-sequence speculative draft budget for this round, granted
+        oldest-first. A round's verify pass is a (kd + 1)-token windowed
+        forward per row -- the same compute shape as a prefill chunk -- so
+        speculative tokens are accounted against the prefill token budget:
+        the batch's base verify positions (one per row, == plain decode)
+        are free, and sum(kd) is capped at what the budget has left. A
+        sequence never drafts past its own token limit (the round emits at
+        most kd + 1 tokens)."""
+        if self.spec_draft_len <= 0:
+            return [0] * len(batch)
+        budget = max(0, self.max_prefill_tokens - len(batch))
+        out = []
+        for seq in batch:              # batch is already oldest-first
+            kd = min(self.spec_draft_len, budget,
+                     max(0, seq.sampling.max_new_tokens
+                         - seq.num_generated - 1))
+            out.append(kd)
+            budget -= kd
+        return out
+
     def _try_decode(self) -> Optional[StepPlan]:
         while True:
             ready = [s for s in self.running
@@ -226,19 +259,29 @@ class Scheduler:
                 return None
             batch = sorted(ready,
                            key=lambda s: s.arrival_time)[:self.max_decode_batch]
-            # blocks needed to write each sequence's next token KV
-            short = []
-            need = 0
-            for seq in batch:
-                want = self.pool.blocks_for(seq.cache_len + 1)
-                if want > len(seq.block_ids):
-                    short.append(seq)
-                    need += want - len(seq.block_ids)
-            if need <= self.pool.num_free:
-                for seq in short:
-                    seq.block_ids.extend(self.pool.alloc(1))
-                return StepPlan("decode", batch)
-            if not self._preempt_youngest(keep=batch[0]):
+            draft_lens = self._grant_draft_budgets(batch)
+            while True:
+                # blocks to cover each sequence's next-token KV write plus
+                # its speculative lookahead (draft + verify write positions
+                # cache_len .. cache_len + kd)
+                deficits = []
+                need = 0
+                for seq, kd in zip(batch, draft_lens):
+                    want = self.pool.blocks_for(seq.cache_len + 1 + kd)
+                    deficits.append(max(0, want - len(seq.block_ids)))
+                    need += deficits[-1]
+                if need <= self.pool.num_free:
+                    for seq, deficit in zip(batch, deficits):
+                        if deficit:
+                            seq.block_ids.extend(self.pool.alloc(deficit))
+                    return StepPlan("decode", batch, draft_lens=draft_lens)
+                if any(draft_lens):
+                    # shed speculative lookahead before evicting anyone: a
+                    # shorter draft is strictly cheaper than a recompute
+                    draft_lens = [max(0, kd - 1) for kd in draft_lens]
+                    continue
+                if self._preempt_youngest(keep=batch[0]):
+                    break              # recompose the batch
                 raise RuntimeError(
                     "KV pool too small for a single sequence; raise n_blocks")
 

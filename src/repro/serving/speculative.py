@@ -1,0 +1,246 @@
+"""LAMP self-draft speculative decoding over the paged KV pool.
+
+LAMP's split -- run everything in low precision, selectively recompute only
+the components the look-ahead error analysis flags -- maps one-to-one onto
+speculative decoding, with *one* set of weights playing both roles:
+
+  draft   = the pure low-precision forward pass (LAMP rule "none": PS(mu)
+            KQ products, nothing recomputed). Runs `draft_len` plain paged
+            decode steps per sequence per round, writing draft KV into the
+            sequence's own blocks.
+  verify  = the LAMP selective-recompute pass (the engine's configured
+            rule). Scores all draft_len + 1 positions in ONE batched
+            multi-token paged forward (`transformer.paged_verify_window`,
+            the chunked-prefill window machinery pointed at the decode
+            tail), which also overwrites the drafted positions' KV with
+            verify-quality values -- so the cache ends up exactly as if the
+            tokens had been decoded non-speculatively.
+
+Acceptance is the standard speculative rule (Leviathan et al. '23), so
+outputs are provably distributed as non-speculative decoding from the
+verify model:
+
+  * greedy (temp <= 0): accept draft j+1 while it equals the verifier's
+    argmax at position j; the first disagreement (or the bonus position)
+    emits the verifier's argmax. Token streams are bit-identical to the
+    non-speculative engine.
+  * sampling: accept draft token d ~ q with probability min(1, p(d)/q(d));
+    on rejection, resample from the residual distribution
+    norm(max(p - q, 0)). Draws use the engine's keyed streams
+    (request seed, position, salt), so they are independent of the draft
+    proposals and of the plain sampler. `top_k` filtering is applied to
+    BOTH p and q before the ratio, matching what each sampler would
+    actually have sampled from.
+
+Every round emits between 1 (first draft rejected -> the verifier's own
+token, i.e. a plain decode step's worth of progress) and draft_len + 1
+(all accepted + bonus) tokens. Rejected drafts' KV is rolled back by the
+engine via `PagedKVPool.rollback`.
+
+Shapes are fixed per (config, draft_len): the draft loop is a
+`lax.scan` of `draft_len` decode steps inside one jitted call, and the
+verify window is bucketed to the next power of two >= draft_len + 1.
+Sequences whose per-round draft budget `kd` is smaller (token limit nearly
+reached: kd = 0 degrades to a verify-only round == one plain decode step)
+freeze their draft cursor early -- frozen steps rewrite the same tail
+position with the same token, and the verifier masks everything past
+kd + 1, so no extra shapes are compiled and no garbage KV survives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+from . import sampling
+
+_DRAFT_RULES = ("none", "strict", "relaxed", "relaxed_ln")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs.
+
+    draft_len  -- tokens drafted per sequence per round (k). The verify
+                  window scores k + 1 positions (k drafts + bonus).
+    draft_rule -- LAMP rule for the drafter. "none" (default) is the
+                  paper-motivated self-draft: the pure low-precision
+                  forward with zero recompute. The verify rule always
+                  comes from the engine's model config.
+    """
+    draft_len: int = 4
+    draft_rule: str = "none"
+
+    def __post_init__(self):
+        if self.draft_len < 1:
+            raise ValueError(f"draft_len must be >= 1, got {self.draft_len}")
+        if self.draft_rule not in _DRAFT_RULES:
+            raise ValueError(f"draft_rule must be one of {_DRAFT_RULES}, "
+                             f"got {self.draft_rule!r}")
+
+    @property
+    def verify_width(self) -> int:
+        """Verify-window bucket: next power of two >= draft_len + 1."""
+        w = 1
+        while w < self.draft_len + 1:
+            w *= 2
+        return w
+
+
+def draft_model_config(cfg, spec: SpecConfig):
+    """The drafter's model config: same weights, same mu, the draft rule at
+    the KQ site (rule "none" = pure low-precision logits, no recompute)."""
+    pol = cfg.lamp
+    if not pol.kq.enabled or pol.kq.rule == spec.draft_rule:
+        return cfg
+    return cfg.replace(lamp=pol.replace(kq=pol.kq.replace(rule=spec.draft_rule)))
+
+
+def speculative_accept(verify_logits, draft_tokens, draft_logits, kd,
+                       seeds, counts, temps, top_k
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Vectorized accept/reject + correction sampling.
+
+    verify_logits (R, >=k+1, V): target logits; position j scores the token
+        following draft prefix d_1..d_j.
+    draft_tokens  (R, k): proposals d_1..d_k (garbage past kd, ignored).
+    draft_logits  (R, k, V): the (unfiltered) logits each proposal was
+        sampled from.
+    kd (R,): per-row draft budget this round; acceptance never exceeds it.
+    seeds/counts/temps (R,): the engine's per-request sampling state at
+        round start. top_k (R,) filters both p and q before the ratio;
+        None skips the filter (no request in the batch uses one).
+
+    Returns (emit (R, k+1) int32, n_accepted (R,) int32): row r's tokens
+    for this round are emit[r, :n_accepted[r] + 1] -- the accepted drafts
+    followed by one token from the verifier (the residual resample at the
+    first rejection, or the bonus sample when everything was accepted).
+    """
+    R, k = draft_tokens.shape
+    V = verify_logits.shape[-1]
+    if top_k is not None:    # None: skip the per-row vocab sort entirely
+        p_f = sampling.apply_top_k_rows(verify_logits[:, :k + 1], top_k)
+        q_f = sampling.apply_top_k_rows(draft_logits, top_k)
+    else:
+        p_f, q_f = verify_logits[:, :k + 1], draft_logits
+    greedy = temps <= 0.0
+    tsafe = jnp.maximum(temps, 1e-6)[:, None, None]
+    p_prob = jax.nn.softmax(p_f / tsafe, axis=-1)        # (R, k+1, V)
+    q_prob = jax.nn.softmax(q_f / tsafe, axis=-1)        # (R, k,   V)
+    d = draft_tokens
+    p_d = jnp.take_along_axis(p_prob[:, :k], d[..., None], -1)[..., 0]
+    q_d = jnp.take_along_axis(q_prob, d[..., None], -1)[..., 0]
+    # acceptance coins: u_j < p_j(d)/q_j(d), keyed on (seed, position, salt)
+    u = sampling.row_uniforms(
+        seeds, counts[:, None] + jnp.arange(k)[None, :],
+        sampling.SALT_ACCEPT)
+    acc_sample = u * q_d <= p_d
+    p_arg = jnp.argmax(p_f, axis=-1)                     # (R, k+1)
+    acc_greedy = p_arg[:, :k] == d
+    j = jnp.arange(k)[None, :]
+    acc = jnp.where(greedy[:, None], acc_greedy, acc_sample) \
+        & (j < kd[:, None])
+    # accepted prefix length: stop at the first rejection
+    cum = jnp.cumprod(acc.astype(jnp.int32), axis=1)
+    n_acc = jnp.sum(cum, axis=1)                         # (R,) in [0, kd]
+    ridx = jnp.arange(R)
+    p_a = p_prob[ridx, n_acc]                            # (R, V)
+    q_a = q_prob[ridx, jnp.minimum(n_acc, k - 1)]
+    # rejected at n_acc < kd: residual max(p - q, 0); all accepted: bonus
+    # position sampled straight from p (no draft to correct against)
+    resid = jnp.clip(p_a - q_a, 0.0, None)
+    dist = jnp.where((n_acc < kd)[:, None], resid, p_a)
+    # degenerate residual (p <= q everywhere up to roundoff, yet the coin
+    # rejected): fall back to the target distribution
+    dist = jnp.where(jnp.sum(dist, -1, keepdims=True) > 0, dist, p_a)
+    g = sampling.row_gumbel(seeds, counts + n_acc, sampling.SALT_RESIDUAL,
+                            (V,))
+    samp = jnp.argmax(jnp.where(dist > 0, jnp.log(dist), -jnp.inf) + g, -1)
+    corr = jnp.where(greedy, p_arg[ridx, n_acc], samp).astype(jnp.int32)
+    emit = jnp.where(j < n_acc[:, None], d, 0).astype(jnp.int32)
+    emit = jnp.concatenate([emit, jnp.zeros((R, 1), jnp.int32)], axis=1)
+    emit = emit.at[ridx, n_acc].set(corr)
+    return emit, n_acc
+
+
+# jitted (draft, verify) pairs keyed on (cfg, use_lamp, kernel, spec),
+# shared across engine instances like engine._JIT_CACHE. KV arenas are
+# donated so per-round updates alias the pool buffers in place.
+_SPEC_JIT_CACHE: Dict[Any, Any] = {}
+
+
+def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
+                  use_topk: bool = True):
+    """Build (draft_fn, verify_fn) for one engine configuration.
+
+    draft_fn(params, k, v, bt, lengths, tok0, kd, seeds, counts, temps,
+             topks) -> (draft_tokens (R, k), draft_logits (R, k, V),
+                        arena_k, arena_v)
+        runs `draft_len` low-precision paged decode steps (a lax.scan, one
+        jitted call), sampling each proposal from the draft distribution
+        with the SALT_DRAFT key stream. Rows freeze at their budget kd.
+
+    verify_fn(params, k, v, tok0, draft_tokens, draft_logits, bt, lengths,
+              kd, seeds, counts, temps, topks)
+        -> (emit (R, k+1), n_accepted (R,), arena_k, arena_v,
+            n_selected (R,), n_valid (R,))
+        one multi-token paged forward over [last_token, d_1..d_k] at
+        absolute positions lengths..lengths+k with the engine's LAMP verify
+        rule (rewriting those positions' KV), then `speculative_accept`.
+        n_selected/n_valid are the verify pass's per-row LAMP counts.
+
+    `use_topk` is a static trace-time switch (as in engine._jitted_steps):
+    False skips the per-row top-k vocab sorts for batches where no request
+    filters, which is the common case.
+    """
+    key = (cfg, use_lamp, kernel, spec, use_topk)
+    fns = _SPEC_JIT_CACHE.get(key)
+    if fns is not None:
+        return fns
+    k = spec.draft_len
+    dcfg = draft_model_config(cfg, spec) if use_lamp else cfg
+
+    def _draft(params, ak, av, bt, lengths, tok0, kd, seeds, counts, temps,
+               topks):
+        def body(carry, j):
+            tok, ak, av = carry
+            # frozen rows (j >= kd) rewrite the same tail position with the
+            # same token: no new shape, and the verifier overwrites it
+            len_j = lengths + jnp.minimum(j, kd)
+            logits, arena, _ = transformer.paged_decode_step(
+                dcfg, params, {"k": ak, "v": av}, bt, len_j, tok[:, None],
+                use_lamp=use_lamp, kernel=kernel)
+            lg = logits[:, -1]
+            nxt = sampling.sample_rows(lg, seeds, counts + j, temps,
+                                       top_k=topks if use_topk else None,
+                                       salt=sampling.SALT_DRAFT)
+            nxt = jnp.where(j < kd, nxt.astype(jnp.int32), tok)
+            return (nxt, arena["k"], arena["v"]), (nxt, lg)
+
+        (_, ak, av), (toks, qlog) = jax.lax.scan(
+            body, (tok0, ak, av), jnp.arange(k))
+        return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(qlog, 0, 1), ak, av)
+
+    def _verify(params, ak, av, tok0, d_toks, d_logits, bt, lengths, kd,
+                seeds, counts, temps, topks):
+        win = jnp.concatenate([tok0[:, None], d_toks], axis=1)   # (R, k+1)
+        Wv = spec.verify_width
+        if Wv > k + 1:
+            win = jnp.pad(win, ((0, 0), (0, Wv - (k + 1))))
+        logits, arena, (nsel, nval) = transformer.paged_verify_window(
+            cfg, params, win, {"k": ak, "v": av}, bt, lengths, kd + 1,
+            use_lamp=use_lamp, kernel=kernel)
+        emit, n_acc = speculative_accept(
+            logits, d_toks, d_logits, kd, seeds, counts, temps,
+            topks if use_topk else None)
+        return emit, n_acc, arena["k"], arena["v"], nsel, nval
+
+    fns = (jax.jit(_draft, donate_argnums=(1, 2)),
+           jax.jit(_verify, donate_argnums=(1, 2)))
+    _SPEC_JIT_CACHE[key] = fns
+    return fns

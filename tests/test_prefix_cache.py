@@ -102,6 +102,15 @@ class PoolHarness:
         self.pool.free_blocks(seq.block_ids)
         seq.block_ids = []
 
+    def rollback(self, sid, n_tokens):
+        """Speculative rollback: truncate a sequence's cache to n_tokens
+        (<= its current cache_len), freeing the surplus blocks and COWing a
+        shared/registered partial tail."""
+        seq = self.seqs[sid]
+        n_tokens = min(n_tokens, seq.cache_len)
+        seq.block_ids = self.pool.rollback(seq.block_ids, n_tokens)
+        seq.cache_len = seq.prefill_cursor = n_tokens
+
     def defrag(self):
         live = sorted(self.seqs.values(), key=lambda s: s.arrival_time)
         self.pool.defrag(live)
@@ -154,13 +163,16 @@ def _random_tokens(rng, vocab, block_size):
 
 
 def _fuzz_step(h, rng):
-    ops = ["admit", "admit", "free", "double_free", "defrag"]
+    ops = ["admit", "admit", "free", "double_free", "rollback", "defrag"]
     op = ops[int(rng.integers(len(ops)))]
     if op == "admit":
         h.admit(_random_tokens(rng, h.vocab, h.pool.block_size))
     elif op == "free" and h.seqs:
         sid = list(h.seqs)[int(rng.integers(len(h.seqs)))]
         h.free(sid)
+    elif op == "rollback" and h.seqs:
+        sid = list(h.seqs)[int(rng.integers(len(h.seqs)))]
+        h.rollback(sid, int(rng.integers(0, h.seqs[sid].cache_len + 1)))
     elif op == "double_free" and h.seqs:
         # freeing a sequence's blocks twice must raise, never corrupt
         sid = list(h.seqs)[int(rng.integers(len(h.seqs)))]
@@ -242,6 +254,68 @@ def test_pool_cow_and_sharing_semantics(tiny_cfg):
     assert pool.match_prefix(tokens) == []
 
 
+def test_pool_rollback_frees_surplus_and_conserves(tiny_cfg):
+    pool = PagedKVPool(tiny_cfg, n_blocks=10, block_size=2)
+    blocks = pool.alloc(4)                      # covers 8 tokens
+    kept = pool.rollback(blocks, 3)             # 3 tokens -> 2 blocks
+    assert kept == blocks[:2]
+    assert pool.num_free == pool.num_total - 2
+    assert pool.refcount == {blocks[0]: 1, blocks[1]: 1}
+    # surplus is really free: re-freeing it raises (double free)
+    with pytest.raises(ValueError, match="double free"):
+        pool.free_blocks([blocks[2]])
+    # rollback to zero releases everything
+    assert pool.rollback(kept, 0) == []
+    assert pool.num_free == pool.num_total
+    # rollback cannot keep more blocks than the sequence owns
+    with pytest.raises(ValueError, match="rollback"):
+        pool.rollback([], 1)
+
+
+def test_pool_rollback_cow_never_mutates_shared_block(tiny_cfg):
+    """Rolling back into a COW-shared tail must copy, not mutate: the other
+    owner's arena row is untouched and its table still points at it."""
+    pool = PagedKVPool(tiny_cfg, n_blocks=8, block_size=2,
+                       enable_prefix_cache=True)
+    blocks = pool.alloc(3)                      # seq A: 6 tokens
+    pool.share(blocks)                          # seq B shares all three
+    ids = jnp.arange(pool.n_blocks, dtype=jnp.float32)
+    pool.k = jnp.ones_like(pool.k) * ids[None, :, None, None, None]
+    # A rolls back to 3 tokens: block 2 freed (B still owns it), block 1
+    # becomes A's partial tail -> must be COW'd off the shared copy
+    kept = pool.rollback(list(blocks), 3)
+    assert kept[0] == blocks[0]
+    assert kept[1] != blocks[1], "shared partial tail must be copied"
+    assert pool.refcount[blocks[0]] == 2        # still shared
+    assert pool.refcount[blocks[1]] == 1        # B's copy survives
+    assert pool.refcount[blocks[2]] == 1
+    assert pool.refcount[kept[1]] == 1
+    # the shared row's contents were copied, not moved or zeroed
+    assert float(pool.k[0, blocks[1], 0, 0, 0]) == blocks[1]
+    assert float(pool.k[0, kept[1], 0, 0, 0]) == blocks[1]
+    assert not pool.needs_cow(kept[1])
+
+
+def test_pool_rollback_registered_tail_cow_and_index_survival(tiny_cfg):
+    """Rollback into a registered (prefix-indexed) block COWs the partial
+    tail; the index keeps mapping the original block with its contents."""
+    pool = PagedKVPool(tiny_cfg, n_blocks=8, block_size=2,
+                       enable_prefix_cache=True)
+    tokens = [1, 0, 1, 1, 0, 0]
+    blocks = pool.alloc(3)
+    pool.register_prefix(tokens, blocks, 6)     # all three blocks indexed
+    kept = pool.rollback(list(blocks), 3)       # mid-block cap in block 1
+    assert kept[0] == blocks[0]
+    assert kept[1] != blocks[1], "registered partial tail must be copied"
+    # the index still maps the original chain (contents never mutated);
+    # freed/copied-off blocks sit on the cached-free LRU, still matchable
+    assert pool.match_prefix(tokens) == blocks
+    assert pool.is_cached_free(blocks[1]) and pool.is_cached_free(blocks[2])
+    # block-aligned rollback keeps the (full, registered) tail without COW
+    kept2 = pool.rollback(kept, 2)
+    assert kept2 == kept[:1]
+
+
 def test_engine_rejects_zero_prefill_budget(model):
     cfg, params = model
     with pytest.raises(ValueError, match="max_prefill_tokens"):
@@ -319,6 +393,17 @@ if HAVE_HYPOTHESIS:
                     # blocks that actually went free: re-freeing must fault
                     # (still-shared ones would just drop another owner)
                     self.h.pool.free_blocks(gone)
+
+        @rule(idx=st.integers(0, 1 << 30), frac=st.floats(0.0, 1.0))
+        def rollback(self, idx, frac):
+            """Speculative rollback to any point in a sequence's cache must
+            conserve blocks, never corrupt shared/registered state, and
+            leave a writable (private) partial tail."""
+            if not self.h.seqs:
+                return
+            sid = list(self.h.seqs)[idx % len(self.h.seqs)]
+            n = int(frac * self.h.seqs[sid].cache_len)
+            self.h.rollback(sid, n)
 
         @rule()
         def defrag(self):

@@ -1,0 +1,413 @@
+"""Tests for LAMP self-draft speculative decoding.
+
+Layers:
+
+  * Accept-rule units: greedy acceptance chains, the kd budget mask, the
+    bonus position, and a statistical check that the accept/residual-
+    resample rule reproduces the target distribution for an arbitrary
+    draft distribution (the correctness property of Leviathan et al.).
+  * Verify-window unit: `paged_verify_window` position-by-position logits
+    match sequential `paged_decode_step` logits (same tokens, same cache).
+  * Engine differential (the acceptance criterion): the speculative engine
+    at temp=0 produces bit-identical token streams to the non-speculative
+    engine for kernel="gather" and kernel="pallas", across chunked prefill
+    + prefix sharing, with per-request acceptance rates in [0, 1] and mean
+    acceptance > 0.5 on the reduced-GPT-2 smoke config.
+  * Robustness: preemption pressure under a tiny pool, stop-token
+    truncation mid-accepted-run, draft budgets clamped by the token limit,
+    temperature/top-k streams, and block-leak checks after every run.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import api, transformer
+from repro.serving import (EngineConfig, LampEngine, SamplingParams,
+                           SpecConfig)
+from repro.serving import sampling as SAMP
+from repro.serving.speculative import (draft_model_config, spec_step_fns,
+                                       speculative_accept)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduce_cfg(get_config("gpt2")).replace(vocab=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(rng, cfg, n):
+    return rng.integers(0, cfg.vocab, size=n).tolist()
+
+
+def _run_engine(cfg, params, requests, **ekw):
+    kw = dict(block_size=4, max_model_len=64, max_prefill_tokens=16,
+              max_prefill_batch=4, max_decode_batch=8)
+    kw.update(ekw)
+    engine = LampEngine(cfg, params, EngineConfig(**kw))
+    for prompt, sp in requests:
+        engine.add_request(prompt, sp)
+    outs = engine.run_to_completion()
+    assert engine.pool.num_used == 0, "leaked KV blocks"
+    return engine, {o.req_id: o for o in outs}
+
+
+# ------------------------------------------------------------ accept rule
+
+def _accept(verify_logits, draft_tokens, draft_logits, kd, temps, top_k=None,
+            seeds=None, counts=None):
+    draft_tokens = np.asarray(draft_tokens, np.int32)
+    R, k = draft_tokens.shape
+    if seeds is None:
+        seeds = np.arange(R, dtype=np.int32)
+    if counts is None:
+        counts = np.zeros(R, np.int32)
+    if top_k is None:
+        top_k = np.zeros(R, np.int32)
+    emit, n_acc = speculative_accept(
+        jnp.asarray(verify_logits, jnp.float32),
+        jnp.asarray(draft_tokens, jnp.int32),
+        jnp.asarray(draft_logits, jnp.float32),
+        jnp.asarray(kd, jnp.int32), jnp.asarray(seeds, jnp.int32),
+        jnp.asarray(counts, jnp.int32), jnp.asarray(temps, jnp.float32),
+        jnp.asarray(top_k, jnp.int32))
+    return np.asarray(emit), np.asarray(n_acc)
+
+
+def test_accept_greedy_chains():
+    """Greedy: accept while the draft equals the verifier's argmax; the
+    emitted token at the cut is the verifier's argmax there."""
+    V, k = 8, 3
+    p = np.full((1, k + 1, V), -10.0, np.float32)
+    argmaxes = [2, 5, 1, 7]
+    for j, t in enumerate(argmaxes):
+        p[0, j, t] = 0.0
+    q = np.zeros((1, k, V), np.float32)
+
+    # all drafts match -> accept all + bonus argmax
+    emit, n = _accept(p, [[2, 5, 1]], q, [k], [0.0])
+    assert n[0] == 3 and emit[0, :4].tolist() == [2, 5, 1, 7]
+    # mismatch at j=1 -> one accepted, correction is argmax at position 1
+    emit, n = _accept(p, [[2, 4, 1]], q, [k], [0.0])
+    assert n[0] == 1 and emit[0, :2].tolist() == [2, 5]
+    # immediate mismatch -> plain-decode progress (verifier's first argmax)
+    emit, n = _accept(p, [[0, 5, 1]], q, [k], [0.0])
+    assert n[0] == 0 and emit[0, 0] == 2
+    # the kd budget caps acceptance even when everything matches
+    emit, n = _accept(p, [[2, 5, 1]], q, [1], [0.0])
+    assert n[0] == 1 and emit[0, :2].tolist() == [2, 5]
+    # kd = 0: verify-only round == one plain decode step
+    emit, n = _accept(p, [[0, 0, 0]], q, [0], [0.0])
+    assert n[0] == 0 and emit[0, 0] == 2
+
+
+def test_accept_matches_target_distribution():
+    """With p != q at temperature 1, the emitted first token of each round
+    must be distributed as p (accept + residual resample == exact target
+    sampling). Empirical check over many independent rows."""
+    V, R, k = 4, 4096, 1
+    rng = np.random.default_rng(0)
+    p_logits = np.array([0.5, -0.6, 1.2, -2.0], np.float32)
+    q_logits = np.array([-1.0, 1.0, 0.0, 0.3], np.float32)
+    temps = np.ones(R, np.float32)
+    seeds = np.arange(R, dtype=np.int32)
+    counts = np.zeros(R, np.int32)
+    # draft proposals sampled from q exactly like the drafter would
+    d = np.asarray(SAMP.sample_rows(
+        jnp.broadcast_to(jnp.asarray(q_logits), (R, V)),
+        jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
+        salt=SAMP.SALT_DRAFT))[:, None]
+    verify = np.broadcast_to(p_logits, (R, k + 1, V)).copy()
+    draft = np.broadcast_to(q_logits, (R, k, V)).copy()
+    emit, n_acc = _accept(verify, d, draft, np.ones(R, np.int32), temps,
+                          seeds=seeds, counts=counts)
+    first = np.where(n_acc > 0, d[:, 0], emit[np.arange(R), n_acc])
+    counts_emp = np.bincount(first, minlength=V) / R
+    p = np.exp(p_logits) / np.exp(p_logits).sum()
+    assert (n_acc > 0).any() and (n_acc == 0).any()
+    np.testing.assert_allclose(counts_emp, p, atol=0.035)
+
+
+def test_accept_statistical_independent_of_draft_dist():
+    """Same check with q == p (acceptance ~ 1) and with a near-disjoint q
+    (acceptance ~ 0): the output marginal stays p either way."""
+    V, R = 4, 4096
+    p_logits = np.array([1.0, 0.0, -1.0, 0.5], np.float32)
+    p = np.exp(p_logits) / np.exp(p_logits).sum()
+    temps = np.ones(R, np.float32)
+    seeds = np.arange(R, dtype=np.int32)
+    counts = np.zeros(R, np.int32)
+    for q_logits, lo, hi in [(p_logits, 0.95, 1.01),
+                             (np.array([-8, -8, 8, -8], np.float32),
+                              0.0, 0.35)]:
+        d = np.asarray(SAMP.sample_rows(
+            jnp.broadcast_to(jnp.asarray(q_logits), (R, V)),
+            jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
+            salt=SAMP.SALT_DRAFT))[:, None]
+        emit, n_acc = _accept(np.broadcast_to(p_logits, (R, 2, V)).copy(),
+                              d, np.broadcast_to(q_logits, (R, 1, V)).copy(),
+                              np.ones(R, np.int32), temps,
+                              seeds=seeds, counts=counts)
+        rate = float(np.mean(n_acc))
+        assert lo <= rate <= hi, rate
+        first = np.where(n_acc > 0, d[:, 0], emit[np.arange(R), n_acc])
+        emp = np.bincount(first, minlength=V) / R
+        np.testing.assert_allclose(emp, p, atol=0.035)
+
+
+def test_top_k_filter_applies_to_both_distributions():
+    """top_k=1 makes both p and q degenerate at their argmax: greedy
+    behavior at any temperature."""
+    V = 6
+    p = np.random.default_rng(1).normal(size=(64, 2, V)).astype(np.float32)
+    q = np.random.default_rng(2).normal(size=(64, 1, V)).astype(np.float32)
+    d = np.argmax(q[:, 0], axis=-1)[:, None].astype(np.int32)
+    emit, n_acc = _accept(p, d, q, np.ones(64, np.int32),
+                          np.full(64, 0.9, np.float32),
+                          top_k=np.ones(64, np.int32))
+    p_arg = np.argmax(p, axis=-1)
+    for r in range(64):
+        expect_acc = int(p_arg[r, 0] == d[r, 0])
+        assert n_acc[r] == expect_acc
+        assert emit[r, n_acc[r]] == p_arg[r, n_acc[r]]
+
+
+# ------------------------------------------------------- verify window unit
+
+@pytest.mark.parametrize("kernel", ["gather", "pallas"])
+def test_verify_window_matches_sequential_decode(model, kernel):
+    """One multi-token verify window over tokens t1..t3 must reproduce the
+    logits of three sequential decode steps feeding those same tokens."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    prompt = _prompt(rng, cfg, 9)
+    bs = 4
+    arenas = [transformer.init_paged_cache(cfg, 16, bs, jnp.float32)
+              for _ in range(2)]
+    bt = jnp.asarray(np.array([[1, 2, 3, 4, 0, 0, 0, 0]], np.int32))
+    tokens = np.zeros((1, 16), np.int32)
+    tokens[0, :9] = prompt
+    steps = [int(x) for x in rng.integers(0, cfg.vocab, size=4)]
+    seq_logits = []
+    for name, arena in (("seq", arenas[0]), ("win", arenas[1])):
+        _, arena, _ = transformer.paged_prefill(
+            cfg, params, jnp.asarray(tokens), arena, bt,
+            jnp.asarray([9], jnp.int32), kernel=kernel)
+        if name == "seq":
+            length = 9
+            for t in steps[:3]:
+                lg, arena, _ = transformer.paged_decode_step(
+                    cfg, params, arena, bt, jnp.asarray([length], jnp.int32),
+                    jnp.asarray([[t]], jnp.int32), kernel=kernel)
+                seq_logits.append(np.asarray(lg)[0, 0])
+                length += 1
+        else:
+            win = np.zeros((1, 4), np.int32)
+            win[0, :3] = steps[:3]
+            wlg, arena, _ = transformer.paged_verify_window(
+                cfg, params, jnp.asarray(win), arena, bt,
+                jnp.asarray([9], jnp.int32), jnp.asarray([3], jnp.int32),
+                kernel=kernel)
+            win_logits = np.asarray(wlg)[0]
+    for j in range(3):
+        np.testing.assert_allclose(win_logits[j], seq_logits[j],
+                                   atol=2e-4, rtol=2e-4)
+        assert np.argmax(win_logits[j]) == np.argmax(seq_logits[j])
+
+
+def test_draft_model_config_rule_none(model):
+    cfg, _ = model
+    dcfg = draft_model_config(cfg, SpecConfig(draft_len=3))
+    assert dcfg.lamp.kq.rule == "none"
+    assert dcfg.lamp.kq.mu == cfg.lamp.kq.mu
+    off = cfg.replace(lamp=cfg.lamp.replace(
+        kq=cfg.lamp.kq.replace(enabled=False)))
+    assert draft_model_config(off, SpecConfig()) is off
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError, match="draft_len"):
+        SpecConfig(draft_len=0)
+    with pytest.raises(ValueError, match="draft_rule"):
+        SpecConfig(draft_rule="fancy")
+    assert SpecConfig(draft_len=4).verify_width == 8
+    assert SpecConfig(draft_len=3).verify_width == 4
+
+
+def test_spec_fns_cached(model):
+    cfg, _ = model
+    a = spec_step_fns(cfg, True, "gather", SpecConfig(draft_len=3))
+    b = spec_step_fns(cfg, True, "gather", SpecConfig(draft_len=3))
+    c = spec_step_fns(cfg, True, "gather", SpecConfig(draft_len=4))
+    assert a is b and a is not c
+
+
+# ------------------------------------------------------ engine differential
+
+@pytest.mark.parametrize("kernel", ["gather", "pallas"])
+def test_spec_engine_greedy_identity(model, kernel):
+    """THE acceptance criterion: bit-identical greedy token streams spec-on
+    vs spec-off, through chunked prefill + prefix sharing, on both
+    kernels; per-request acceptance in [0, 1], mean acceptance > 0.5."""
+    cfg, params = model
+    rng = np.random.default_rng(21)
+    shared = _prompt(rng, cfg, 9)        # shared prefix: starts > 0 windows
+    reqs = []
+    for i in range(6):
+        prompt = (shared if i % 2 else []) + _prompt(
+            rng, cfg, int(rng.integers(3, 18)))
+        reqs.append((prompt, SamplingParams(
+            max_new_tokens=int(rng.integers(2, 9)), seed=i)))
+    base_e, base = _run_engine(cfg, params, reqs, kernel=kernel,
+                               max_prefill_tokens=8)     # force chunking
+    spec_e, spec = _run_engine(cfg, params, reqs, kernel=kernel,
+                               max_prefill_tokens=8,
+                               speculative=True, draft_len=3)
+    assert len(spec) == len(base) == len(reqs)
+    rates = []
+    for i in base:
+        assert spec[i].tokens == base[i].tokens, f"req {i}"
+        assert 0.0 <= spec[i].spec_acceptance_rate <= 1.0
+        if spec[i].spec_drafted:
+            rates.append(spec[i].spec_acceptance_rate)
+    assert rates and float(np.mean(rates)) > 0.5
+    s = spec_e.stats()
+    assert s["spec_rounds"] > 0
+    assert s["spec_accepted_tokens"] <= s["spec_drafted_tokens"]
+    assert 0.0 <= s["spec_acceptance_rate"] <= 1.0
+    # speculative rounds emit > 1 token/round on average here, so the spec
+    # engine must have used strictly fewer decode rounds
+    assert s["spec_tokens_per_round"] > 1.0
+    assert spec_e.decode_steps < base_e.decode_steps
+    # the verify pass runs the real LAMP rule: recompute telemetry flows
+    assert s["verify_recompute_rate"] > 0
+    assert base_e.stats()["spec_rounds"] == 0
+
+
+def test_spec_engine_sampled_streams_complete(model):
+    """Temperature / top-k rows: correct lengths, sane telemetry (sampled
+    streams are distribution-equal, not bit-equal, to non-speculative)."""
+    cfg, params = model
+    rng = np.random.default_rng(22)
+    reqs = [(_prompt(rng, cfg, int(rng.integers(3, 16))),
+             SamplingParams(max_new_tokens=6, seed=i, temperature=0.8,
+                            top_k=0 if i % 2 else 16))
+            for i in range(5)]
+    engine, outs = _run_engine(cfg, params, reqs, speculative=True,
+                               draft_len=4)
+    for i, (prompt, sp) in enumerate(reqs):
+        assert len(outs[i].tokens) == sp.max_new_tokens
+        assert all(0 <= t < cfg.vocab for t in outs[i].tokens)
+        assert 0.0 <= outs[i].spec_acceptance_rate <= 1.0
+    assert engine.stats()["spec_drafted_tokens"] > 0
+
+
+def test_spec_engine_preemption_pressure_identity(model):
+    """A tiny pool under speculative decoding (rollbacks + preemptions +
+    draft-lookahead shedding) must still match the unconstrained greedy
+    stream."""
+    cfg, params = model
+    rng = np.random.default_rng(23)
+    reqs = [(_prompt(rng, cfg, int(rng.integers(12, 36))),
+             SamplingParams(max_new_tokens=8, seed=i)) for i in range(6)]
+    _, base = _run_engine(cfg, params, reqs, n_blocks=200,
+                          max_prefill_tokens=8)
+    small, spec = _run_engine(cfg, params, reqs, n_blocks=20,
+                              max_prefill_tokens=8, speculative=True,
+                              draft_len=4)
+    for i in base:
+        assert spec[i].tokens == base[i].tokens, f"req {i}"
+
+
+def test_spec_stop_token_truncates_accepted_run(model):
+    """A stop token accepted mid-run ends the request there; surplus
+    accepted tokens are dropped and their blocks rolled back."""
+    cfg, params = model
+    rng = np.random.default_rng(24)
+    prompt = _prompt(rng, cfg, 7)
+    _, g = _run_engine(cfg, params,
+                       [(prompt, SamplingParams(max_new_tokens=8))])
+    greedy = g[0].tokens
+    stop = greedy[len(greedy) // 2]
+    want = greedy[:greedy.index(stop) + 1]
+    _, b = _run_engine(cfg, params, [(prompt, SamplingParams(
+        max_new_tokens=8, stop_token=stop))])
+    _, s = _run_engine(cfg, params, [(prompt, SamplingParams(
+        max_new_tokens=8, stop_token=stop))], speculative=True, draft_len=4)
+    assert b[0].tokens == s[0].tokens == want
+    assert s[0].finish_reason == "stop_token"
+
+
+def test_spec_draft_budget_clamped_by_token_limit(model):
+    """max_new_tokens=1 leaves no draft budget: every round is verify-only
+    (kd=0) and still emits the right token."""
+    cfg, params = model
+    rng = np.random.default_rng(25)
+    reqs = [(_prompt(rng, cfg, 6), SamplingParams(max_new_tokens=1, seed=0))]
+    _, base = _run_engine(cfg, params, reqs)
+    engine, spec = _run_engine(cfg, params, reqs, speculative=True,
+                               draft_len=4)
+    assert spec[0].tokens == base[0].tokens
+    assert spec[0].spec_drafted == 0
+    assert engine.stats()["spec_acceptance_rate"] == 0.0
+
+
+def test_spec_rejects_bad_draft_len(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="draft_len"):
+        LampEngine(cfg, params, EngineConfig(speculative=True, draft_len=0))
+
+
+# -------------------------------------------------------------- engine misc
+
+def test_run_to_completion_raises_on_max_steps(model):
+    cfg, params = model
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=4, max_model_len=64))
+    engine.add_request([1, 2, 3], SamplingParams(max_new_tokens=8))
+    with pytest.raises(RuntimeError, match="1 request\\(s\\) still live"):
+        engine.run_to_completion(max_steps=2)
+    assert engine.stats()["live_requests"] == 1
+    # the stream is resumable after the limit fires
+    outs = engine.run_to_completion()
+    assert len(outs) == 1 and engine.stats()["live_requests"] == 0
+
+
+def test_shared_sampler_top_k(model):
+    """Engine top_k=1 at temperature > 0 equals the greedy stream (the
+    filter leaves only the argmax); shared static sampler agrees."""
+    cfg, params = model
+    rng = np.random.default_rng(26)
+    prompt = _prompt(rng, cfg, 8)
+    _, greedy = _run_engine(cfg, params, [(prompt, SamplingParams(
+        max_new_tokens=6, temperature=0.0))])
+    _, k1 = _run_engine(cfg, params, [(prompt, SamplingParams(
+        max_new_tokens=6, temperature=1.1, top_k=1))])
+    assert k1[0].tokens == greedy[0].tokens
+    lg = jnp.asarray(rng.normal(size=(3, 11)), jnp.float32)
+    out = SAMP.sample(lg, jax.random.PRNGKey(0), 0.9, top_k=1)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(jnp.argmax(lg, -1)))
+    # per-row filter: k=0 rows exactly unfiltered, k>0 rows keep top-k
+    filt = SAMP.apply_top_k_rows(lg, jnp.asarray([0, 2, 11]))
+    np.testing.assert_array_equal(np.asarray(filt[0]), np.asarray(lg[0]))
+    np.testing.assert_array_equal(np.asarray(filt[2]), np.asarray(lg[2]))
+    assert int(np.sum(np.isfinite(np.asarray(filt[1])))) == 2
+
+
+def test_serve_loop_sampler_routed_through_shared(model):
+    """The static-batch loop's sampler is the shared implementation:
+    greedy at temp <= 0 and Gumbel-max (== categorical) above."""
+    from repro.runtime.serve_loop import _sample
+    rng = np.random.default_rng(27)
+    lg = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    key = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(
+        np.asarray(_sample(lg, key, 0.0)), np.asarray(jnp.argmax(lg, -1)))
+    got = np.asarray(_sample(lg, key, 0.7))
+    want = np.asarray(jax.random.categorical(key, lg / 0.7, axis=-1))
+    np.testing.assert_array_equal(got, want)

@@ -34,6 +34,12 @@ self-draft speculative decoding ON and OFF, asserts token identity, and
 reports accepted tokens per decode round (each round replaces that many
 sequential decode steps) plus the verify pass's LAMP recompute rate.
 
+The observability section (standalone via --obs-only) replays one stream
+with step-phase tracing ON and OFF, asserts token identity (observability
+must never perturb serving), reports the per-step overhead of tracing, and
+emits one CSV row per engine phase (schedule / alloc / prefill / decode /
+sync / emit) with its measured mean wall time from the phase histograms.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
 """
 
@@ -48,6 +54,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import api
+from repro.obs import ObsConfig
 from repro.runtime.serve_loop import ServeConfig, generate
 from repro.serving import EngineConfig, LampEngine, SamplingParams
 
@@ -292,6 +299,58 @@ def bench_speculative(cfg, params, rng, n_requests, draft_len=4):
     return on
 
 
+def run_obs_stream(cfg, params, reqs, *, trace):
+    """One stream, all requests admitted up front, with tracing on or off
+    (the metrics registry itself is always on, by design)."""
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, max_model_len=128, max_decode_batch=16, use_lamp=True,
+        obs=ObsConfig(trace=trace)))
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    t0 = time.monotonic()
+    outs = engine.run_to_completion()
+    wall = time.monotonic() - t0
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "wall_s": wall, "steps": engine.total_steps,
+            "us_per_step": wall / max(1, engine.total_steps) * 1e6,
+            "engine": engine}
+
+
+def bench_obs(cfg, params, rng, n_requests):
+    """Observability cost: tracing on vs off must be token-identical, and
+    the per-step overhead of recording every phase span must stay small
+    (<5% is the acceptance bar; the dominant cost per step is the jitted
+    model call, so span bookkeeping should be noise). Also emits the
+    per-phase mean wall times the trace/metrics pipeline measured."""
+    n = max(n_requests, 8)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=24,
+                         min_new=8, max_new=16)
+    for trace in (False, True):                      # warm the jit caches
+        run_obs_stream(cfg, params, reqs, trace=trace)
+    # best-of-2 per arm: per-step walls are a few ms on CPU, so a single
+    # noisy run could fake (or mask) the overhead being measured
+    off, on = [min((run_obs_stream(cfg, params, reqs, trace=t)
+                    for _ in range(2)), key=lambda r: r["us_per_step"])
+               for t in (False, True)]
+    identical = on["tokens"] == off["tokens"]
+    overhead = (on["us_per_step"] - off["us_per_step"]) / off["us_per_step"]
+    print(f"serve_obs_off,{off['us_per_step']:.0f},steps={off['steps']}")
+    print(f"serve_obs_on,{on['us_per_step']:.0f},steps={on['steps']}"
+          f";trace_events={len(on['engine'].obs.tracer.events())}")
+    print(f"serve_obs_overhead,0,overhead={overhead:+.1%}"
+          f";outputs_identical={identical}")
+    for name, h in sorted(on["engine"].obs._phase_children.items()):
+        if h.count:
+            print(f"serve_obs_phase_{name},{h.mean * 1e6:.0f},"
+                  f"count={h.count};p99_us={h.quantile(0.99) * 1e6:.0f}")
+    if not identical:
+        raise SystemExit("tracing-on outputs diverged from tracing-off")
+    if overhead > 0.05:
+        raise SystemExit(f"observability overhead {overhead:.1%} exceeds "
+                         f"the 5% per-step budget")
+    return overhead
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -299,6 +358,9 @@ def main():
     ap.add_argument("--spec-only", action="store_true",
                     help="run only the speculative-decoding section (the "
                          "CI spec-decode CSV artifact)")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="run only the observability-cost section (the CI "
+                         "obs CSV artifact)")
     args = ap.parse_args()
 
     cfg = reduce_cfg(get_config("gpt2"))
@@ -309,6 +371,9 @@ def main():
     print("name,us_per_call,derived")
     if args.spec_only:
         bench_speculative(cfg, params, rng, args.requests)
+        return
+    if args.obs_only:
+        bench_obs(cfg, params, rng, args.requests)
         return
     results = {}
     for mode in ("static", "engine"):
@@ -341,6 +406,8 @@ def main():
     bench_kernel_paths(cfg, params, rng, args.requests)
 
     bench_speculative(cfg, params, rng, args.requests)
+
+    bench_obs(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

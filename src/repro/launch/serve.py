@@ -9,18 +9,30 @@ prompt/output lengths drawn per request; the engine admits them into the
 paged KV pool, continuously batches prefill/decode, and reports throughput,
 latency percentiles, KV-block utilization, and the per-request/aggregate
 LAMP recompute rate.
+
+Observability hooks: `--metrics-every S` prints a one-line registry
+snapshot every S seconds of stream time; `--trace-out f.json` records
+step-phase spans and writes a Chrome trace (load it at https://ui.perfetto.dev
+or chrome://tracing); `--metrics-out f.json` dumps the final metrics
+registry snapshot; `--jax-profile DIR` wraps the run in
+`jax.profiler.trace`. All loop timing -- arrivals, idle sleeps, the
+periodic snapshot cadence -- runs off the engine's single injectable clock
+(`engine.obs.now`), so `serve_stream` is deterministic under a fake clock.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Callable, List, Optional
 
 import jax
 import numpy as np
 
 from repro.configs import get_config, list_archs, reduced as reduce_cfg
 from repro.models import api
+from repro.obs import ObsConfig
 from repro.serving import EngineConfig, LampEngine, SamplingParams
 from repro.serving.engine import TEXT_FAMILIES
 
@@ -48,6 +60,57 @@ def build_stream(rng: np.random.Generator, args, vocab: int):
                                   top_k=args.top_k)
         reqs.append((float(arrivals[i]), prompt, sampling))
     return reqs
+
+
+def metrics_line(engine: LampEngine, elapsed: float) -> str:
+    """One-line live snapshot for periodic progress logging."""
+    s = engine.stats()
+    return (f"[serve] t={elapsed:7.2f}s live={s['live_requests']:>3d} "
+            f"done={s['num_finished']:>3d} steps={s['steps']} "
+            f"tok/s={s['tokens_per_s']:7.1f} "
+            f"kv_util={s['kv_util_peak']:.0%} "
+            f"lamp_rate={s['lamp_recompute_rate']:.4f} "
+            f"compiles={s['compiles']}")
+
+
+def serve_stream(engine: LampEngine, stream, *,
+                 metrics_every: float = 0.0,
+                 sleep: Optional[Callable[[float], None]] = None,
+                 log: Callable[[str], None] = print,
+                 per_request: bool = True) -> List:
+    """Drive the engine over a pre-built (arrival_s, prompt, sampling)
+    stream. Every timestamp -- arrivals, idle waits, the snapshot cadence --
+    comes from the engine's own clock (`engine.obs.now`), so a fake clock
+    plus a clock-advancing `sleep` makes the whole loop deterministic."""
+    clock = engine.obs.now
+    if sleep is None:
+        sleep = time.sleep
+    t0 = clock()
+    next_metrics = metrics_every
+    i, outputs = 0, []
+    while i < len(stream) or engine.has_unfinished():
+        now = clock() - t0
+        while i < len(stream) and stream[i][0] <= now:
+            arr, prompt, sampling = stream[i]
+            engine.add_request(prompt, sampling, arrival_time=t0 + arr)
+            i += 1
+        done = engine.step()
+        outputs.extend(done)
+        if per_request:
+            for o in done:
+                log(f"[serve]   req {o.req_id:>3d} done: "
+                    f"prompt={len(o.prompt)} new={len(o.tokens)} "
+                    f"latency={o.latency * 1e3:7.1f}ms "
+                    f"ttft={o.ttft * 1e3:7.1f}ms "
+                    f"preempt={o.num_preemptions} "
+                    f"cached={o.num_cached_tokens} "
+                    f"lamp_rate={o.lamp_recompute_rate:.4f}")
+        if metrics_every > 0 and clock() - t0 >= next_metrics:
+            log(metrics_line(engine, clock() - t0))
+            next_metrics += metrics_every
+        if not engine.has_unfinished() and i < len(stream):
+            sleep(max(0.0, stream[i][0] - (clock() - t0)))
+    return outputs
 
 
 def main():
@@ -100,6 +163,18 @@ def main():
                          "accept rule scores against")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-lamp", action="store_true")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="print a one-line metrics snapshot every S seconds "
+                         "of stream time (0 = off)")
+    ap.add_argument("--trace-out", default="",
+                    help="record step-phase spans and write a Chrome trace "
+                         "JSON here (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the final metrics-registry snapshot (JSON) "
+                         "here")
+    ap.add_argument("--jax-profile", default="",
+                    help="wrap the run in jax.profiler.trace writing to "
+                         "this directory (TensorBoard/XPlane format)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -116,6 +191,8 @@ def main():
                  f"({longest + args.max_new}) exceeds the model length "
                  f"budget {max_len}; raise --max-model-len "
                  f"(<= cfg.max_seq {cfg.max_seq}) or shrink the request sizes")
+    obs = ObsConfig(trace=bool(args.trace_out), trace_path=args.trace_out,
+                    jax_profile_dir=args.jax_profile)
     engine = LampEngine(cfg, params, EngineConfig(
         block_size=args.block_size, n_blocks=args.n_blocks,
         max_model_len=max_len, use_lamp=not args.no_lamp,
@@ -123,7 +200,7 @@ def main():
         prefix_cache=args.prefix_cache,
         chunked_prefill=args.chunked_prefill,
         kernel=args.kernel, speculative=args.speculative,
-        draft_len=args.draft_len))
+        draft_len=args.draft_len, obs=obs))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -133,26 +210,13 @@ def main():
           f"prefix_cache={args.prefix_cache} "
           f"chunked_prefill={args.chunked_prefill} kernel={args.kernel}")
 
-    t0 = time.monotonic()
-    i, outputs = 0, []
-    while i < len(stream) or engine.has_unfinished():
-        now = time.monotonic() - t0
-        while i < len(stream) and stream[i][0] <= now:
-            arr, prompt, sampling = stream[i]
-            engine.add_request(prompt, sampling, arrival_time=t0 + arr)
-            i += 1
-        done = engine.step()
-        outputs.extend(done)
-        for o in done:
-            print(f"[serve]   req {o.req_id:>3d} done: prompt={len(o.prompt)} "
-                  f"new={len(o.tokens)} latency={o.latency*1e3:7.1f}ms "
-                  f"ttft={o.ttft*1e3:7.1f}ms preempt={o.num_preemptions} "
-                  f"cached={o.num_cached_tokens} "
-                  f"lamp_rate={o.lamp_recompute_rate:.4f}")
-        if not engine.has_unfinished() and i < len(stream):
-            time.sleep(max(0.0, stream[i][0] - (time.monotonic() - t0)))
+    with engine.obs.profile():
+        outputs = serve_stream(engine, stream,
+                               metrics_every=args.metrics_every)
 
-    s = engine.stats()
+    # end-of-run report: exact percentiles over every finished request
+    # (the periodic lines above use the streaming histogram estimates)
+    s = engine.stats(exact=True)
     mean_rate = (np.mean([o.lamp_recompute_rate for o in outputs])
                  if outputs else 0.0)
     print(f"[serve] finished {s['num_finished']}/{args.num_requests} "
@@ -174,6 +238,20 @@ def main():
           f"{s['prefill_chunks']} prefill chunks")
     print(f"[serve] LAMP recompute rate: aggregate "
           f"{s['lamp_recompute_rate']:.4f}, per-request mean {mean_rate:.4f}")
+    rates = s["lamp_layer_rates"]
+    if any(v > 0 for v in rates):
+        print("[serve] per-layer recompute rate: "
+              + " ".join(f"L{i}={r:.3f}" for i, r in enumerate(rates)))
+    if s["compiles"]:
+        print(f"[serve] jit compiles: {s['compiles']} "
+              f"({s['compile_time_s']:.2f}s wall): "
+              + " ".join(f"{e['kind']}{e['shape']}"
+                         for e in engine.compile_events))
+    phases = sorted(s["phase"].items(),
+                    key=lambda kv: -kv[1]["mean_us"] * kv[1]["count"])
+    print("[serve] phase wall time: "
+          + "  ".join(f"{name}={p['mean_us']:.0f}us x{p['count']}"
+                      for name, p in phases))
     if args.speculative:
         acc = [o.spec_acceptance_rate for o in outputs if o.spec_drafted]
         print(f"[serve] speculative: {s['spec_rounds']} rounds, "
@@ -181,6 +259,15 @@ def main():
               f"(per-request mean {np.mean(acc) if acc else 0.0:.2%}), "
               f"{s['spec_tokens_per_round']:.2f} tokens/round, "
               f"verify recompute rate {s['verify_recompute_rate']:.4f}")
+    if args.trace_out:
+        path = engine.write_trace()
+        n = len(engine.obs.tracer.events())
+        print(f"[serve] wrote Chrome trace ({n} events, "
+              f"{engine.obs.tracer.dropped} dropped) to {path}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(engine.metrics_snapshot(), f, indent=1)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
 
 
 if __name__ == "__main__":

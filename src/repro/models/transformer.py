@@ -325,7 +325,7 @@ def init_paged_cache(cfg, n_blocks: int, block_size: int,
 def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
                   block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
                   use_lamp: bool = True, moe_groups: int = 1,
-                  kernel: str = "gather"):
+                  kernel: str = "gather", per_layer: bool = False):
     """Prefill a padded batch of prompts into the paged arena.
 
     tokens: (B, S) left-aligned prompts padded to the bucket length S;
@@ -343,14 +343,15 @@ def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
     starts = jnp.zeros_like(lengths)
     return paged_prefill_window(cfg, params, tokens, arena, block_tables,
                                 starts, lengths, use_lamp=use_lamp,
-                                moe_groups=moe_groups, kernel=kernel)
+                                moe_groups=moe_groups, kernel=kernel,
+                                per_layer=per_layer)
 
 
 def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
                          arena: Dict[str, Any], block_tables: jnp.ndarray,
                          starts: jnp.ndarray, lengths: jnp.ndarray, *,
                          use_lamp: bool = True, moe_groups: int = 1,
-                         kernel: str = "gather"):
+                         kernel: str = "gather", per_layer: bool = False):
     """Prefill a *window* of each prompt against an existing block table.
 
     Row b runs tokens at absolute positions starts[b] .. starts[b] +
@@ -380,12 +381,15 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
     Returns (last_logits (B, 1, V), arena, (n_selected (B,), n_valid (B,)))
     with last_logits at each row's final valid *window* position (only
     meaningful for rows whose window completes the prompt) and LAMP counts
-    covering the KQ products actually computed in this window.
+    covering the KQ products actually computed in this window. With
+    `per_layer=True` the counts keep their layer axis -- (L, B) instead of
+    (B,) -- so serving can attribute recompute work per layer per request.
     """
     B = tokens.shape[0]
     x, arena, counts = _paged_window_apply(
         cfg, params, tokens, arena, block_tables, starts, lengths,
-        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel)
+        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel,
+        per_layer=per_layer)
     x_last = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
     logits = LY.unembed(cfg, params["embed"], x_last)
     return logits, arena, counts
@@ -395,7 +399,7 @@ def paged_verify_window(cfg, params, tokens: jnp.ndarray,
                         arena: Dict[str, Any], block_tables: jnp.ndarray,
                         starts: jnp.ndarray, lengths: jnp.ndarray, *,
                         use_lamp: bool = True, moe_groups: int = 1,
-                        kernel: str = "gather"):
+                        kernel: str = "gather", per_layer: bool = False):
     """Multi-query decode-verify step: the speculative verifier.
 
     Identical computation to `paged_prefill_window` -- row b runs `tokens`
@@ -412,20 +416,26 @@ def paged_verify_window(cfg, params, tokens: jnp.ndarray,
 
     Returns (logits (B, W, V) float32, arena,
     (n_selected (B,), n_valid (B,))). Logits at positions >= lengths[b]
-    are computed over padded queries and must be ignored.
+    are computed over padded queries and must be ignored. `per_layer=True`
+    keeps the counts' layer axis: (L, B).
     """
     x, arena, counts = _paged_window_apply(
         cfg, params, tokens, arena, block_tables, starts, lengths,
-        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel)
+        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel,
+        per_layer=per_layer)
     logits = LY.unembed(cfg, params["embed"], x)
     return logits, arena, counts
 
 
 def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
-                        lengths, *, use_lamp, moe_groups, kernel):
+                        lengths, *, use_lamp, moe_groups, kernel,
+                        per_layer: bool = False):
     """Shared window forward: runs the block stack over one window per row
     and returns the final-norm hidden states (B, W, d), the updated arena,
-    and per-row LAMP (n_selected, n_valid) summed over layers."""
+    and per-row LAMP (n_selected, n_valid) -- summed over layers by
+    default, or stacked per layer as (L, B) arrays when `per_layer=True`
+    (the scan already produces the layer axis; the flag only skips the
+    reduction, so the telemetry costs nothing extra on device)."""
     B, W = tokens.shape
     n_max = block_tables.shape[1]
     bs = arena["k"].shape[2]
@@ -499,22 +509,24 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
         x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
     else:
         x = LY.rms_norm(x, params["lnf_w"])
-    return x, {"k": ks, "v": vs}, (jnp.sum(nsel, axis=0),
-                                   jnp.sum(nval, axis=0))
+    if not per_layer:
+        nsel, nval = jnp.sum(nsel, axis=0), jnp.sum(nval, axis=0)
+    return x, {"k": ks, "v": vs}, (nsel, nval)
 
 
 def paged_decode_step(cfg, params, arena: Dict[str, Any],
                       block_tables: jnp.ndarray, lengths: jnp.ndarray,
                       tokens: jnp.ndarray, *, use_lamp: bool = True,
                       moe_dropless: bool = True, moe_groups: int = 1,
-                      kernel: str = "gather"):
+                      kernel: str = "gather", per_layer: bool = False):
     """One continuous-batch decode step over the paged arena.
 
     tokens: (R, 1) last sampled token per slot; lengths: (R,) cache fill
     (the new token's KV lands at position lengths[r]). kernel selects the
     attention path: "gather" (reference, materializes the block-table span)
     or "pallas" (fused kernel, live blocks only). Returns
-    (logits (R, 1, V), arena, (n_selected (R,), n_valid (R,))).
+    (logits (R, 1, V), arena, (n_selected (R,), n_valid (R,))); counts
+    keep their layer axis -- (L, R) -- with `per_layer=True`.
     """
     x = LY.embed(cfg, params["embed"], tokens, lengths[:, None])
     pol = cfg.lamp
@@ -547,5 +559,6 @@ def paged_decode_step(cfg, params, arena: Dict[str, Any],
     else:
         x = LY.rms_norm(x, params["lnf_w"])
     logits = LY.unembed(cfg, params["embed"], x)
-    return logits, {"k": ks, "v": vs}, (jnp.sum(nsel, axis=0),
-                                        jnp.sum(nval, axis=0))
+    if not per_layer:
+        nsel, nval = jnp.sum(nsel, axis=0), jnp.sum(nval, axis=0)
+    return logits, {"k": ks, "v": vs}, (nsel, nval)

@@ -19,6 +19,10 @@ vLLM-style serving architecture over the repro model stack:
   speculative.py -- LAMP self-draft speculative decoding: low-precision
                   drafter (rule "none") + selective-recompute verifier over
                   the paged pool, standard accept/residual-resample rule
+
+Observability lives in `repro.obs` (metrics registry, step-phase tracer,
+compile-event log); every engine carries an `Observability` bundle at
+`engine.obs`, configured by `EngineConfig.obs` (an `repro.obs.ObsConfig`).
 """
 
 from .engine import EngineConfig, LampEngine, RequestOutput

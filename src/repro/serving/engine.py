@@ -21,22 +21,33 @@ Sampling is inside the jitted step and keyed per request as
 fold_in(PRNGKey(seed), num_generated): a request's sample stream is
 deterministic regardless of how it was batched, bucketed, or preempted.
 
-LAMP telemetry: the paged attention paths return per-row selected/valid
-KQ-product counts; the engine accumulates them per request and in aggregate
-(the paper's recompute-rate metric, now observable per serving request).
+Observability (src/repro/obs/): every step phase -- schedule, block alloc,
+prefill, decode, draft, verify, host<->device sync, emit, defrag -- runs
+inside an `obs.span(...)`, feeding per-phase duration histograms (always on)
+and, with `ObsConfig.trace`, a ring-buffered Chrome-trace exporter. The
+engine's counters live in the obs metrics registry (`stats()` is a view over
+it; the legacy attribute names are properties over the same counters). LAMP
+recompute counts are threaded per layer: the jitted steps return (L, B)
+selected/valid counts, accumulated into per-layer counters, a bounded
+recompute-rate time series, and per-request per-layer breakdowns. Jit
+compiles are detected per call (the bucketed step cache growing) and logged
+with their bucket shape and wall time -- recompile storms are the canonical
+silent perf killer of fixed-shape serving.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
+from repro.obs import ObsConfig, Observability
 
 from . import sampling
 from .kv_pool import PagedKVPool
@@ -79,6 +90,10 @@ class EngineConfig:
     # same distribution (standard accept/residual-resample rule).
     speculative: bool = False
     draft_len: int = 4
+    # observability: the metrics registry and per-phase histograms are
+    # always on; obs.trace additionally records step-phase spans for
+    # Chrome-trace export (see repro.obs.ObsConfig)
+    obs: ObsConfig = ObsConfig()
 
 
 @dataclasses.dataclass
@@ -95,10 +110,21 @@ class RequestOutput:
     num_cached_tokens: int = 0      # prompt tokens served from prefix cache
     spec_drafted: int = 0           # tokens drafted for this request
     spec_accepted: int = 0          # drafted tokens the verifier accepted
+    # per-layer LAMP breakdown (length n_layers; sums to the scalars above)
+    lamp_layer_selected: Optional[List[float]] = None
+    lamp_layer_valid: Optional[List[float]] = None
 
     @property
     def lamp_recompute_rate(self) -> float:
         return self.lamp_selected / self.lamp_valid if self.lamp_valid else 0.0
+
+    @property
+    def lamp_layer_rates(self) -> List[float]:
+        """Per-layer recompute rate for this request (empty if no LAMP)."""
+        if not self.lamp_layer_selected:
+            return []
+        return [s / v if v else 0.0 for s, v in
+                zip(self.lamp_layer_selected, self.lamp_layer_valid)]
 
     @property
     def spec_acceptance_rate(self) -> float:
@@ -111,6 +137,15 @@ def _bucket(n: int, cap: int) -> int:
     while b < n:
         b *= 2
     return min(b, cap) if cap else b
+
+
+def _cache_size(fn) -> int:
+    """Compiled-signature count of a jitted function; -1 when the runtime
+    does not expose it (compile events are then simply not recorded)."""
+    try:
+        return fn._cache_size()
+    except Exception:
+        return -1
 
 
 # jitted step functions keyed on (cfg, use_lamp), shared across engine
@@ -127,7 +162,8 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
     """`use_topk` is a static trace-time switch: the per-row top-k filter
     needs a vocab sort per row per step, so batches where every request has
     top_k == 0 (the common case) use the variant that skips it entirely.
-    At most two variants compile per (cfg, use_lamp, kernel)."""
+    At most two variants compile per (cfg, use_lamp, kernel). LAMP counts
+    come back per layer ((L, B) arrays); the host side reduces them."""
     key = (cfg, use_lamp, kernel, use_topk)
     fns = _JIT_CACHE.get(key)
     if fns is None:
@@ -135,7 +171,7 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
                      counts, temps, topks):
             logits, arena, (nsel, nval) = transformer.paged_prefill_window(
                 cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
-                use_lamp=use_lamp, kernel=kernel)
+                use_lamp=use_lamp, kernel=kernel, per_layer=True)
             nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
                                        top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
@@ -144,7 +180,7 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
                     topks):
             logits, arena, (nsel, nval) = transformer.paged_decode_step(
                 cfg, params, {"k": k, "v": v}, bt, lengths, tokens,
-                use_lamp=use_lamp, kernel=kernel)
+                use_lamp=use_lamp, kernel=kernel, per_layer=True)
             nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
                                        top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
@@ -156,7 +192,8 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
 
 
 class LampEngine:
-    def __init__(self, cfg, params, econfig: EngineConfig = EngineConfig()):
+    def __init__(self, cfg, params, econfig: EngineConfig = EngineConfig(),
+                 *, clock: Optional[Callable[[], float]] = None):
         if cfg.family not in TEXT_FAMILIES:
             raise ValueError(
                 f"serving engine supports the paged-KV text families "
@@ -190,6 +227,11 @@ class LampEngine:
                 f"cannot hold one max-length sequence: need "
                 f"{self.blocks_per_seq + 1} for max_model_len="
                 f"{self.max_model_len} at block_size={bs}")
+        # all engine timestamps (arrivals, ttft, latency, trace spans) come
+        # from this single injectable clock: no clock-domain mixing, and a
+        # fake clock makes every timing-dependent path testable
+        self.obs = Observability(econfig.obs, clock=clock)
+        self._now = self.obs.now
         self.pool = PagedKVPool(cfg, n_blocks=n_blocks, block_size=bs,
                                 dtype=jnp.dtype(econfig.kv_dtype),
                                 enable_prefix_cache=econfig.prefix_cache)
@@ -198,30 +240,132 @@ class LampEngine:
             max_prefill_tokens=econfig.max_prefill_tokens,
             max_decode_batch=econfig.max_decode_batch,
             chunked_prefill=econfig.chunked_prefill,
-            spec_draft_len=econfig.draft_len if econfig.speculative else 0)
+            spec_draft_len=econfig.draft_len if econfig.speculative else 0,
+            obs=self.obs)
         self._next_id = 0
         self._seqs: Dict[int, Sequence] = {}
         self._finished: List[RequestOutput] = []
         self._util_samples: List[float] = []
         self._start: Optional[float] = None
-        self.total_steps = 0
-        self.prefill_steps = 0
-        self.decode_steps = 0
-        self.prefill_chunks = 0         # partial windows (prompt continues)
-        self.prefill_tokens_run = 0     # prompt tokens actually computed
-        self.generated_tokens = 0
-        self.agg_lamp_selected = 0.0
-        self.agg_lamp_valid = 0.0
-        # speculative-decoding telemetry
-        self.spec_rounds = 0            # decode rounds run speculatively
-        self.spec_drafted = 0           # draft tokens proposed
-        self.spec_accepted = 0          # draft tokens the verifier accepted
-        self.spec_emitted = 0           # tokens emitted by spec rounds
-        self.spec_verify_selected = 0.0  # LAMP counts of the verify passes
-        self.spec_verify_valid = 0.0
+
+        # -- metrics registry: the single source of truth for the engine's
+        # cumulative counters (stats() and the legacy attribute properties
+        # below are views over it); children resolved once, so the per-step
+        # cost is a float add
+        reg = self.obs.registry
+        steps = reg.counter("engine_steps_total",
+                            help="engine steps by kind", labels=("kind",))
+        self._c_prefill_steps = steps.labels("prefill")
+        self._c_decode_steps = steps.labels("decode")
+        self._c_spec_rounds = steps.labels("spec")
+        self._c_prefill_chunks = reg.counter(
+            "engine_prefill_chunks_total",
+            help="partial prefill windows (prompt continued next step)")
+        self._c_prefill_tokens = reg.counter(
+            "engine_prefill_tokens_total",
+            help="prompt tokens actually computed", unit="tokens")
+        self._c_generated = reg.counter(
+            "engine_generated_tokens_total", help="tokens emitted",
+            unit="tokens")
+        self._c_finished = reg.counter(
+            "engine_requests_finished_total", help="requests completed")
+        spec = reg.counter("engine_spec_tokens_total",
+                           help="speculative-decoding token flow",
+                           labels=("event",))
+        self._c_spec_drafted = spec.labels("drafted")
+        self._c_spec_accepted = spec.labels("accepted")
+        self._c_spec_emitted = spec.labels("emitted")
+        lamp = reg.counter("lamp_kq_products_total",
+                           help="KQ products by layer and disposition "
+                                "(selected = recomputed in high precision)",
+                           labels=("layer", "kind"))
+        L = cfg.n_layers
+        self._c_lamp_sel = [lamp.labels(str(l), "selected") for l in range(L)]
+        self._c_lamp_val = [lamp.labels(str(l), "valid") for l in range(L)]
+        vspec = reg.counter("lamp_verify_products_total",
+                            help="LAMP counts of speculative verify passes",
+                            labels=("kind",))
+        self._c_verify_sel = vspec.labels("selected")
+        self._c_verify_val = vspec.labels("valid")
+        self._h_latency = reg.histogram(
+            "engine_request_latency_seconds",
+            help="request arrival -> finish", unit="s")
+        self._h_ttft = reg.histogram(
+            "engine_request_ttft_seconds",
+            help="request arrival -> first token", unit="s")
+        # per-layer accumulators mirrored into the counters above (numpy so
+        # the per-step update is one vector add), plus a bounded time series
+        # of instantaneous per-layer recompute rates
+        self._layer_sel = np.zeros((L,), np.float64)
+        self._layer_val = np.zeros((L,), np.float64)
+        from collections import deque
+        self.layer_rate_series = deque(maxlen=econfig.obs.series_capacity)
 
         self.spec_config = (SpecConfig(draft_len=econfig.draft_len)
                             if econfig.speculative else None)
+
+    # -- legacy counter attributes: views over the metrics registry ----------
+
+    @property
+    def prefill_steps(self) -> int:
+        return int(self._c_prefill_steps.value)
+
+    @property
+    def decode_steps(self) -> int:
+        # speculative rounds are decode steps too (one round == one step)
+        return int(self._c_decode_steps.value + self._c_spec_rounds.value)
+
+    @property
+    def total_steps(self) -> int:
+        return self.prefill_steps + self.decode_steps
+
+    @property
+    def prefill_chunks(self) -> int:
+        return int(self._c_prefill_chunks.value)
+
+    @property
+    def prefill_tokens_run(self) -> int:
+        return int(self._c_prefill_tokens.value)
+
+    @property
+    def generated_tokens(self) -> int:
+        return int(self._c_generated.value)
+
+    @property
+    def agg_lamp_selected(self) -> float:
+        return float(self._layer_sel.sum())
+
+    @property
+    def agg_lamp_valid(self) -> float:
+        return float(self._layer_val.sum())
+
+    @property
+    def spec_rounds(self) -> int:
+        return int(self._c_spec_rounds.value)
+
+    @property
+    def spec_drafted(self) -> int:
+        return int(self._c_spec_drafted.value)
+
+    @property
+    def spec_accepted(self) -> int:
+        return int(self._c_spec_accepted.value)
+
+    @property
+    def spec_emitted(self) -> int:
+        return int(self._c_spec_emitted.value)
+
+    @property
+    def spec_verify_selected(self) -> float:
+        return self._c_verify_sel.value
+
+    @property
+    def spec_verify_valid(self) -> float:
+        return self._c_verify_val.value
+
+    @property
+    def compile_events(self):
+        return self.obs.compile_events
 
     # step functions resolve per batch: `use_topk` selects the jit variant
     # with/without the per-row top-k vocab sort (global caches dedupe, so
@@ -257,7 +401,7 @@ class LampEngine:
         self._next_id += 1
         seq = Sequence(req_id, prompt, sampling,
                        arrival_time if arrival_time is not None
-                       else time.monotonic())
+                       else self._now())
         self._seqs[req_id] = seq
         self.scheduler.add(seq)
         return req_id
@@ -270,25 +414,27 @@ class LampEngine:
     def step(self) -> List[RequestOutput]:
         """Run one engine step; returns requests finished by this step."""
         if self._start is None:
-            self._start = time.monotonic()
-        plan = self.scheduler.schedule()
+            self._start = self._now()
+        with self.obs.span("schedule"):
+            plan = self.scheduler.schedule()
         if plan is None:
             return []
         if plan.kind == "prefill":
             self._step_prefill(plan.seqs, plan.windows)
-            self.prefill_steps += 1
+            self._c_prefill_steps.inc()
         elif self.econfig.speculative and any(plan.draft_lens):
             self._step_spec(plan.seqs, plan.draft_lens)
-            self.decode_steps += 1
+            self._c_spec_rounds.inc()
         else:
             # no draft budget anywhere (spec off, block pressure shed it,
             # or every sequence is at its token limit): the plain decode
             # step is the same progress at a fraction of the compute
             self._step_decode(plan.seqs)
-            self.decode_steps += 1
-        self.total_steps += 1
+            self._c_decode_steps.inc()
         self._util_samples.append(self.pool.utilization)
-        return self._collect_finished(plan.seqs)
+        with self.obs.span("emit"):
+            done = self._collect_finished(plan.seqs)
+        return done
 
     def _batch_arrays(self, seqs: List[Sequence], Bb: int):
         bt = np.zeros((Bb, self.blocks_per_seq), np.int32)
@@ -303,6 +449,34 @@ class LampEngine:
             temps[i] = seq.sampling.temperature
             topks[i] = seq.sampling.top_k
         return bt, seeds, counts, temps, topks
+
+    def _account_lamp(self, seqs: List[Sequence], nsel: np.ndarray,
+                      nval: np.ndarray, *, verify: bool = False
+                      ) -> None:
+        """Fold one step's per-layer (L, B) LAMP counts into the per-layer
+        counters, the recompute-rate time series, and each sequence's
+        per-layer breakdown."""
+        sel_l = nsel.sum(axis=1)
+        val_l = nval.sum(axis=1)
+        self._layer_sel += sel_l
+        self._layer_val += val_l
+        for l in range(len(sel_l)):
+            self._c_lamp_sel[l].inc(float(sel_l[l]))
+            self._c_lamp_val[l].inc(float(val_l[l]))
+        if verify:
+            self._c_verify_sel.inc(float(sel_l.sum()))
+            self._c_verify_val.inc(float(val_l.sum()))
+        if val_l.sum() > 0:
+            rates = np.divide(sel_l, val_l, out=np.zeros_like(sel_l),
+                              where=val_l > 0)
+            self.layer_rate_series.append((self.total_steps, rates))
+            if self.obs.tracer.enabled:
+                self.obs.tracer.counter(
+                    "lamp_recompute_rate",
+                    **{f"layer{l}": round(float(r), 6)
+                       for l, r in enumerate(rates)})
+        for i, seq in enumerate(seqs):
+            seq.lamp.add_layers(nsel[:, i], nval[:, i])
 
     def _step_prefill(self, seqs: List[Sequence],
                       windows: List[int]) -> None:
@@ -322,21 +496,28 @@ class LampEngine:
             lengths[i] = w
         bt, seeds, counts, temps, topks = self._batch_arrays(seqs, Bb)
         prefill_fn, _ = self._step_fns(seqs)
-        nxt, self.pool.k, self.pool.v, nsel, nval = prefill_fn(
-            self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
-            jnp.asarray(bt), jnp.asarray(starts), jnp.asarray(lengths),
-            jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
-            jnp.asarray(topks))
-        nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
-                           np.asarray(nval))
-        now = time.monotonic()
+        n0 = _cache_size(prefill_fn)
+        with self.obs.span("prefill", rows=len(seqs), bucket=[Bb, Wb],
+                           tokens=int(sum(windows))) as sp:
+            out = prefill_fn(
+                self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
+                jnp.asarray(bt), jnp.asarray(starts), jnp.asarray(lengths),
+                jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
+                jnp.asarray(topks))
+        with self.obs.span("sync"):
+            jax.block_until_ready(out)
+            nxt, self.pool.k, self.pool.v, nsel, nval = out
+            nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
+                               np.asarray(nval))
+        if n0 >= 0 and _cache_size(prefill_fn) > n0:
+            self.obs.record_compile("prefill", (Bb, Wb), sp.elapsed,
+                                    self.total_steps)
+        now = self._now()
+        self._account_lamp(seqs, nsel, nval)
         for i, (seq, w) in enumerate(zip(seqs, windows)):
             seq.prefill_cursor += w
             seq.cache_len = seq.prefill_cursor
-            self.prefill_tokens_run += w
-            seq.lamp.add(nsel[i], nval[i])
-            self.agg_lamp_selected += float(nsel[i])
-            self.agg_lamp_valid += float(nval[i])
+            self._c_prefill_tokens.inc(w)
             if self.econfig.prefix_cache:
                 # the window's full blocks now hold real KV: make them
                 # matchable by later arrivals (and by our own resume); the
@@ -347,9 +528,9 @@ class LampEngine:
             if seq.prefill_remaining == 0:
                 seq.status = SequenceStatus.DECODE
                 seq.on_token(int(nxt[i]), now)
-                self.generated_tokens += 1
+                self._c_generated.inc()
             else:
-                self.prefill_chunks += 1
+                self._c_prefill_chunks.inc()
 
     def _step_decode(self, seqs: List[Sequence]) -> None:
         Rb = _bucket(len(seqs), self.econfig.max_decode_batch)
@@ -360,20 +541,27 @@ class LampEngine:
             lengths[i] = seq.cache_len
         bt, seeds, counts, temps, topks = self._batch_arrays(seqs, Rb)
         _, decode_fn = self._step_fns(seqs)
-        nxt, self.pool.k, self.pool.v, nsel, nval = decode_fn(
-            self.params, self.pool.k, self.pool.v, jnp.asarray(bt),
-            jnp.asarray(lengths), jnp.asarray(tokens), jnp.asarray(seeds),
-            jnp.asarray(counts), jnp.asarray(temps), jnp.asarray(topks))
-        nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
-                           np.asarray(nval))
-        now = time.monotonic()
+        n0 = _cache_size(decode_fn)
+        with self.obs.span("decode", rows=len(seqs), bucket=[Rb]) as sp:
+            out = decode_fn(
+                self.params, self.pool.k, self.pool.v, jnp.asarray(bt),
+                jnp.asarray(lengths), jnp.asarray(tokens),
+                jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
+                jnp.asarray(topks))
+        with self.obs.span("sync"):
+            jax.block_until_ready(out)
+            nxt, self.pool.k, self.pool.v, nsel, nval = out
+            nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
+                               np.asarray(nval))
+        if n0 >= 0 and _cache_size(decode_fn) > n0:
+            self.obs.record_compile("decode", (Rb,), sp.elapsed,
+                                    self.total_steps)
+        now = self._now()
+        self._account_lamp(seqs, nsel, nval)
         for i, seq in enumerate(seqs):
             seq.cache_len += 1
-            seq.lamp.add(nsel[i], nval[i])
-            self.agg_lamp_selected += float(nsel[i])
-            self.agg_lamp_valid += float(nval[i])
             seq.on_token(int(nxt[i]), now)
-            self.generated_tokens += 1
+            self._c_generated.inc()
 
     def _step_spec(self, seqs: List[Sequence],
                    draft_lens: List[int]) -> None:
@@ -397,27 +585,34 @@ class LampEngine:
             jnp.asarray, (bt, lengths, tok0, kd, seeds, counts, temps,
                           topks))
         draft_fn, verify_fn = self._spec_fns(seqs)
-        d_toks, d_logits, self.pool.k, self.pool.v = draft_fn(
-            self.params, self.pool.k, self.pool.v, bt, lengths, tok0, kd,
-            seeds, counts, temps, topks)
-        emit, n_acc, self.pool.k, self.pool.v, nsel, nval = verify_fn(
-            self.params, self.pool.k, self.pool.v, tok0, d_toks, d_logits,
-            bt, lengths, kd, seeds, counts, temps, topks)
-        emit, n_acc, nsel, nval = (np.asarray(emit), np.asarray(n_acc),
-                                   np.asarray(nsel), np.asarray(nval))
-        now = time.monotonic()
-        self.spec_rounds += 1
+        n0d, n0v = _cache_size(draft_fn), _cache_size(verify_fn)
+        with self.obs.span("draft", rows=len(seqs), bucket=[Rb]) as spd:
+            d_toks, d_logits, self.pool.k, self.pool.v = draft_fn(
+                self.params, self.pool.k, self.pool.v, bt, lengths, tok0,
+                kd, seeds, counts, temps, topks)
+        with self.obs.span("verify", rows=len(seqs), bucket=[Rb]) as spv:
+            out = verify_fn(
+                self.params, self.pool.k, self.pool.v, tok0, d_toks,
+                d_logits, bt, lengths, kd, seeds, counts, temps, topks)
+        with self.obs.span("sync"):
+            jax.block_until_ready(out)
+            emit, n_acc, self.pool.k, self.pool.v, nsel, nval = out
+            emit, n_acc, nsel, nval = (np.asarray(emit), np.asarray(n_acc),
+                                       np.asarray(nsel), np.asarray(nval))
+        if n0d >= 0 and _cache_size(draft_fn) > n0d:
+            self.obs.record_compile("draft", (Rb,), spd.elapsed,
+                                    self.total_steps)
+        if n0v >= 0 and _cache_size(verify_fn) > n0v:
+            self.obs.record_compile("verify", (Rb,), spv.elapsed,
+                                    self.total_steps)
+        now = self._now()
+        self._account_lamp(seqs, nsel, nval, verify=True)
         for i, seq in enumerate(seqs):
             a = int(n_acc[i])
-            seq.lamp.add(nsel[i], nval[i])
-            self.agg_lamp_selected += float(nsel[i])
-            self.agg_lamp_valid += float(nval[i])
-            self.spec_verify_selected += float(nsel[i])
-            self.spec_verify_valid += float(nval[i])
             seq.spec_drafted += int(draft_lens[i])
             seq.spec_accepted += a
-            self.spec_drafted += int(draft_lens[i])
-            self.spec_accepted += a
+            self._c_spec_drafted.inc(int(draft_lens[i]))
+            self._c_spec_accepted.inc(a)
             # emit accepted drafts + the verifier's token, stopping at the
             # request's own limits (surplus accepted tokens are dropped and
             # their cache rolls back with the rejected ones)
@@ -425,22 +620,26 @@ class LampEngine:
             for t in emit[i, :a + 1]:
                 seq.on_token(int(t), now)
                 appended += 1
-                self.generated_tokens += 1
+                self._c_generated.inc()
                 if seq.should_stop():
                     break
             seq.cache_len += appended
-            self.spec_emitted += appended
+            self._c_spec_emitted.inc(appended)
             seq.block_ids = self.pool.rollback(seq.block_ids, seq.cache_len)
 
     def _collect_finished(self, seqs: List[Sequence]) -> List[RequestOutput]:
         done = []
-        now = time.monotonic()
+        now = self._now()
         for seq in seqs:
             reason = seq.should_stop()
             if reason is None:
                 continue
             seq.finish(reason, now)
             self.scheduler.finish(seq)
+            lamp_l_sel = lamp_l_val = None
+            if seq.lamp.by_layer_selected is not None:
+                lamp_l_sel = [float(s) for s in seq.lamp.by_layer_selected]
+                lamp_l_val = [float(v) for v in seq.lamp.by_layer_valid]
             out = RequestOutput(
                 req_id=seq.req_id, prompt=seq.prompt, tokens=seq.generated,
                 finish_reason=reason, latency=seq.latency(),
@@ -448,34 +647,88 @@ class LampEngine:
                 lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid,
                 num_cached_tokens=seq.num_cached_tokens,
                 spec_drafted=seq.spec_drafted,
-                spec_accepted=seq.spec_accepted)
+                spec_accepted=seq.spec_accepted,
+                lamp_layer_selected=lamp_l_sel,
+                lamp_layer_valid=lamp_l_val)
             self._finished.append(out)
+            self._c_finished.inc()
+            self._h_latency.observe(out.latency)
+            self._h_ttft.observe(out.ttft)
             done.append(out)
         return done
 
     # -- maintenance / metrics ---------------------------------------------
 
     def defrag(self) -> None:
-        self.pool.defrag(sorted(self.scheduler.running,
-                                key=lambda s: s.arrival_time))
+        with self.obs.span("defrag"):
+            self.pool.defrag(sorted(self.scheduler.running,
+                                    key=lambda s: s.arrival_time))
 
     @property
     def num_preemptions(self) -> int:
         return self.scheduler.num_preemptions
 
-    def stats(self) -> Dict[str, Any]:
-        elapsed = (time.monotonic() - self._start) if self._start else 0.0
-        lat = [o.latency for o in self._finished]
-        ttft = [o.ttft for o in self._finished]
+    def _sync_gauges(self) -> None:
+        """Publish point-in-time state (pool, scheduler) into the registry
+        so snapshots/exposition carry it; counters update in the hot path."""
+        reg = self.obs.registry
+        g = reg.gauge("engine_live_requests",
+                      help="requests queued or running")
+        g.set(len(self.scheduler.waiting) + len(self.scheduler.running))
+        reg.gauge("kv_blocks_used", help="arena blocks in use").set(
+            self.pool.num_used)
+        reg.gauge("kv_util", help="arena utilization").set(
+            self.pool.utilization)
+        reg.gauge("kv_util_peak").set(self.pool.peak_used
+                                      / self.pool.num_total)
+        reg.gauge("engine_preemptions", help="recompute-style evictions"
+                  ).set(self.scheduler.num_preemptions)
+        reg.gauge("kv_blocks_allocated_total").set(self.pool.total_allocs)
+        reg.gauge("kv_blocks_prefix_hits_total").set(self.pool.hit_blocks)
+        reg.gauge("kv_cow_copies_total").set(self.pool.cow_copies)
+        reg.gauge("kv_cache_evictions_total").set(self.pool.evictions)
+
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable dump of the whole metrics registry."""
+        self._sync_gauges()
+        return self.obs.registry.snapshot()
+
+    def lamp_layer_rates(self) -> List[float]:
+        """Cumulative per-layer recompute rate (len n_layers)."""
+        return [float(s / v) if v else 0.0
+                for s, v in zip(self._layer_sel, self._layer_val)]
+
+    def stats(self, exact: bool = False) -> Dict[str, Any]:
+        """Cumulative serving stats (a view over the metrics registry).
+
+        Latency/TTFT percentiles come from the streaming histograms --
+        O(buckets) per call, safe to poll under a live stream. Pass
+        `exact=True` for end-of-run reporting: percentiles are then
+        computed exactly over every finished request (O(n log n))."""
+        elapsed = (self._now() - self._start) if self._start else 0.0
+        if exact:
+            lat = [o.latency for o in self._finished]
+            ttft = [o.ttft for o in self._finished]
+            lat_p50 = float(np.percentile(lat, 50)) if lat else 0.0
+            lat_p99 = float(np.percentile(lat, 99)) if lat else 0.0
+            ttft_p50 = float(np.percentile(ttft, 50)) if ttft else 0.0
+        else:
+            lat_p50 = self._h_latency.quantile(0.5)
+            lat_p99 = self._h_latency.quantile(0.99)
+            ttft_p50 = self._h_ttft.quantile(0.5)
         cached = sum(s.num_cached_tokens for s in self._seqs.values())
+        generated = self.generated_tokens
+        n_done = len(self._finished)
+        phase = {name: {"mean_us": h.mean * 1e6, "count": h.count}
+                 for name, h in self.obs._phase_children.items() if h.count}
         return {
-            "num_finished": len(self._finished),
+            "num_finished": n_done,
             "elapsed_s": elapsed,
-            "tokens_per_s": self.generated_tokens / elapsed if elapsed else 0.0,
-            "requests_per_s": len(self._finished) / elapsed if elapsed else 0.0,
-            "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
-            "latency_p99_s": float(np.percentile(lat, 99)) if lat else 0.0,
-            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "tokens_per_s": generated / elapsed if elapsed else 0.0,
+            "requests_per_s": n_done / elapsed if elapsed else 0.0,
+            "latency_p50_s": lat_p50,
+            "latency_p99_s": lat_p99,
+            "ttft_p50_s": ttft_p50,
             "steps": self.total_steps,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
@@ -496,6 +749,14 @@ class LampEngine:
             "lamp_recompute_rate": (self.agg_lamp_selected /
                                     self.agg_lamp_valid
                                     if self.agg_lamp_valid else 0.0),
+            # per-layer LAMP telemetry (cumulative; the bounded time series
+            # lives in engine.layer_rate_series / the trace counter track)
+            "lamp_layer_rates": self.lamp_layer_rates(),
+            # jit-cache observability (see engine.compile_events for the log)
+            "compiles": len(self.compile_events),
+            "compile_time_s": sum(e["wall_s"] for e in self.compile_events),
+            # per-phase wall time (mean us + sample count per phase)
+            "phase": phase,
             # hung-stream visibility: requests still queued or running
             "live_requests": (len(self.scheduler.waiting)
                               + len(self.scheduler.running)),
@@ -512,13 +773,43 @@ class LampEngine:
                                       if self.spec_verify_valid else 0.0),
         }
 
+    def write_trace(self, path: Optional[str] = None) -> str:
+        """Write the buffered step-phase trace as Chrome trace JSON
+        (loadable in Perfetto / chrome://tracing). Requires
+        ObsConfig.trace; `path` defaults to ObsConfig.trace_path."""
+        return self.obs.write_trace(path)
+
+    def _hang_diagnostic(self, n_events: int = 16) -> str:
+        """Snapshot for the run_to_completion hang error: the registry's
+        scalar metrics plus the trace tail, so a hung CI stream is
+        debuggable from the log alone."""
+        self._sync_gauges()
+        scalars = {k: v for k, v in self.obs.registry.snapshot().items()
+                   if isinstance(v, (int, float))}
+        lines = ["registry snapshot: " + json.dumps(scalars, sort_keys=True)]
+        seqs = list(self.scheduler.running) + list(self.scheduler.waiting)
+        lines.append("live sequences: " + "; ".join(
+            f"req {s.req_id} {s.status.value} gen={s.num_generated}"
+            f"/{s.sampling.max_new_tokens} blocks={len(s.block_ids)}"
+            for s in seqs[:8]))
+        if self.obs.tracer.enabled:
+            evs = self.obs.tracer.last(n_events)
+            lines.append(f"last {len(evs)} trace events: " + "; ".join(
+                f"{name}@{ts:.3f}s+{dur * 1e3:.2f}ms"
+                for _, name, _, ts, dur, _ in evs))
+        else:
+            lines.append("trace ring empty (enable EngineConfig.obs.trace "
+                         "for span-level hang forensics)")
+        return "\n".join(lines)
+
     def run_to_completion(self, max_steps: int = 100000) -> List[RequestOutput]:
         """Drive step() until every queued request finishes.
 
         Raises RuntimeError when `max_steps` elapse with requests still
         live, so a hung stream (scheduler stall, runaway generation) is
-        loud instead of silently dropping requests; stats()["live_requests"]
-        exposes the same condition to pollers."""
+        loud instead of silently dropping requests; the error carries a
+        diagnostic snapshot (registry scalars + trace tail) and
+        stats()["live_requests"] exposes the same condition to pollers."""
         out: List[RequestOutput] = []
         for _ in range(max_steps):
             if not self.has_unfinished():
@@ -528,4 +819,5 @@ class LampEngine:
         raise RuntimeError(
             f"run_to_completion exceeded max_steps={max_steps} with {live} "
             f"request(s) still live ({len(self._finished)} finished); the "
-            f"stream is hung or max_steps is too small")
+            f"stream is hung or max_steps is too small\n"
+            + self._hang_diagnostic())

@@ -15,6 +15,8 @@ import dataclasses
 import enum
 from typing import List, Optional
 
+import numpy as np
+
 
 class SequenceStatus(enum.Enum):
     WAITING = "waiting"
@@ -39,14 +41,36 @@ class LampStats:
     """Accumulated LAMP recompute telemetry for one request."""
     selected: float = 0.0           # KQ products recomputed in high precision
     valid: float = 0.0              # KQ products inside the causal mask
+    # per-layer breakdown (length n_layers once populated; each sums to the
+    # scalar above) -- populated by the engine's per-layer step counts
+    by_layer_selected: Optional[np.ndarray] = None
+    by_layer_valid: Optional[np.ndarray] = None
 
     @property
     def recompute_rate(self) -> float:
         return self.selected / self.valid if self.valid > 0 else 0.0
 
+    @property
+    def layer_rates(self) -> List[float]:
+        if self.by_layer_selected is None:
+            return []
+        return [float(s / v) if v else 0.0 for s, v in
+                zip(self.by_layer_selected, self.by_layer_valid)]
+
     def add(self, selected: float, valid: float) -> None:
         self.selected += float(selected)
         self.valid += float(valid)
+
+    def add_layers(self, selected, valid) -> None:
+        """Accumulate one step's per-layer (L,) counts (and the totals)."""
+        selected = np.asarray(selected, np.float64)
+        valid = np.asarray(valid, np.float64)
+        if self.by_layer_selected is None:
+            self.by_layer_selected = np.zeros_like(selected)
+            self.by_layer_valid = np.zeros_like(valid)
+        self.by_layer_selected += selected
+        self.by_layer_valid += valid
+        self.add(selected.sum(), valid.sum())
 
 
 class Sequence:

@@ -41,6 +41,7 @@ block and the oldest request can always eventually run to completion.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from collections import deque
 from typing import Deque, List, Optional, Set
@@ -64,8 +65,14 @@ class StepPlan:
 class Scheduler:
     def __init__(self, pool: PagedKVPool, *, max_prefill_batch: int = 8,
                  max_prefill_tokens: int = 2048, max_decode_batch: int = 32,
-                 chunked_prefill: bool = False, spec_draft_len: int = 0):
+                 chunked_prefill: bool = False, spec_draft_len: int = 0,
+                 obs=None):
         self.pool = pool
+        # optional Observability (repro.obs): block-alloc spans + preemption
+        # instants; None (standalone scheduler tests) degrades to no-ops
+        self._obs = obs
+        self._span = (obs.span if obs is not None
+                      else lambda name, **kw: contextlib.nullcontext())
         self.max_prefill_batch = max_prefill_batch
         self.max_prefill_tokens = max_prefill_tokens
         self.max_decode_batch = max_decode_batch
@@ -103,6 +110,9 @@ class Scheduler:
             victim.preempt()
             self.waiting.appendleft(victim)
             self.num_preemptions += 1
+            if self._obs is not None and self._obs.tracer.enabled:
+                self._obs.tracer.instant("preempt", cat="sched",
+                                         req=victim.req_id)
             return True
         return False
 
@@ -123,7 +133,8 @@ class Scheduler:
         need = self.pool.blocks_for(seq.prefill_cursor + window) \
             - len(seq.block_ids)
         if need > 0:
-            seq.block_ids.extend(self.pool.alloc(need))
+            with self._span("alloc", blocks=need, req=seq.req_id):
+                seq.block_ids.extend(self.pool.alloc(need))
         return window
 
     def _try_admit(self, seq: Sequence, want: int,
@@ -179,7 +190,8 @@ class Scheduler:
             # reused, which num_cached_tokens reflects)
             self.pool.hit_blocks -= 1
         if need_new > 0:
-            seq.block_ids.extend(self.pool.alloc(need_new))
+            with self._span("alloc", blocks=need_new, req=seq.req_id):
+                seq.block_ids.extend(self.pool.alloc(need_new))
         seq.prefill_cursor = cached
         seq.cache_len = cached
         seq.num_cached_tokens += cached
@@ -271,9 +283,12 @@ class Scheduler:
                     deficits.append(max(0, want - len(seq.block_ids)))
                     need += deficits[-1]
                 if need <= self.pool.num_free:
-                    for seq, deficit in zip(batch, deficits):
-                        if deficit:
-                            seq.block_ids.extend(self.pool.alloc(deficit))
+                    if need > 0:
+                        with self._span("alloc", blocks=need):
+                            for seq, deficit in zip(batch, deficits):
+                                if deficit:
+                                    seq.block_ids.extend(
+                                        self.pool.alloc(deficit))
                     return StepPlan("decode", batch, draft_lens=draft_lens)
                 if any(draft_lens):
                     # shed speculative lookahead before evicting anyone: a

@@ -188,11 +188,12 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
     verify_fn(params, k, v, tok0, draft_tokens, draft_logits, bt, lengths,
               kd, seeds, counts, temps, topks)
         -> (emit (R, k+1), n_accepted (R,), arena_k, arena_v,
-            n_selected (R,), n_valid (R,))
+            n_selected (L, R), n_valid (L, R))
         one multi-token paged forward over [last_token, d_1..d_k] at
         absolute positions lengths..lengths+k with the engine's LAMP verify
         rule (rewriting those positions' KV), then `speculative_accept`.
-        n_selected/n_valid are the verify pass's per-row LAMP counts.
+        n_selected/n_valid are the verify pass's per-layer per-row LAMP
+        counts (the engine reduces them).
 
     `use_topk` is a static trace-time switch (as in engine._jitted_steps):
     False skips the per-row top-k vocab sorts for batches where no request
@@ -234,7 +235,7 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
             win = jnp.pad(win, ((0, 0), (0, Wv - (k + 1))))
         logits, arena, (nsel, nval) = transformer.paged_verify_window(
             cfg, params, win, {"k": ak, "v": av}, bt, lengths, kd + 1,
-            use_lamp=use_lamp, kernel=kernel)
+            use_lamp=use_lamp, kernel=kernel, per_layer=True)
         emit, n_acc = speculative_accept(
             logits, d_toks, d_logits, kd, seeds, counts, temps,
             topks if use_topk else None)

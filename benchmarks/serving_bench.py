@@ -34,6 +34,15 @@ self-draft speculative decoding ON and OFF, asserts token identity, and
 reports accepted tokens per decode round (each round replaces that many
 sequential decode steps) plus the verify pass's LAMP recompute rate.
 
+The policy section (standalone via --policy-only, the CI policy-bench CSV
+artifact) replays one burst stream -- all requests admitted at once into a
+deliberately small KV pool -- with the adaptive LAMP policy controller
+off, frozen (observe-only; must be token-identical to off), and on. It
+asserts the on-arm actually traverses the degradation ladder, triggers
+zero recompiles after warmup (tau is a traced operand), does not
+meaningfully regress preemptions, and keeps the recompute-rate increase
+bounded.
+
 The observability section (standalone via --obs-only) replays one stream
 with step-phase tracing ON and OFF, asserts token identity (observability
 must never perturb serving), reports the per-step overhead of tracing, and
@@ -56,7 +65,8 @@ from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import api
 from repro.obs import ObsConfig
 from repro.runtime.serve_loop import ServeConfig, generate
-from repro.serving import EngineConfig, LampEngine, SamplingParams
+from repro.serving import (EngineConfig, LampEngine, PolicyConfig,
+                           SamplingParams)
 
 
 def make_requests(rng, cfg, n, min_prompt=8, max_prompt=40, min_new=4,
@@ -351,6 +361,115 @@ def bench_obs(cfg, params, rng, n_requests):
     return overhead
 
 
+def run_policy_stream(cfg, params, reqs, *, mode, n_blocks=40, draft_len=4,
+                      target_rate=0.05, util_high=0.55, util_low=0.35,
+                      shed_util=0.80):
+    """Burst load: every request admitted up front into a deliberately
+    small pool, so utilization and preemption pressure climb fast enough
+    to exercise the controller's degradation ladder.
+
+    mode: "off" (no controller), "frozen" (controller observes and
+    publishes but never actuates -- must be token-identical to off), or
+    "on" (full actuation)."""
+    policy = PolicyConfig(
+        enabled=(mode != "off"), frozen=(mode == "frozen"),
+        target_rate=target_rate, interval=1,
+        util_high=util_high, util_low=util_low, shed_util=shed_util)
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, max_model_len=128, max_decode_batch=16,
+        n_blocks=n_blocks, use_lamp=True, speculative=True,
+        draft_len=draft_len, policy=policy))
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    outs, walls = [], []
+    t0 = time.monotonic()
+    while engine.has_unfinished():
+        s0 = time.monotonic()
+        outs.extend(engine.step())
+        walls.append(time.monotonic() - s0)
+    wall = time.monotonic() - t0
+    s = engine.stats()
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "wall_s": wall,
+            "step_p99_us": float(np.percentile(walls, 99)) * 1e6,
+            "preemptions": s["preemptions"],
+            "lamp_rate": s["lamp_recompute_rate"],
+            "kv_util_mean": s["kv_util_mean"],
+            "compiles": s["compiles"],
+            "policy": s["policy"]}
+
+
+def bench_policy(cfg, params, rng, n_requests):
+    """Adaptive LAMP policy controller under burst load (standalone via
+    --policy-only, the CI policy-bench CSV artifact). Three arms on the
+    same burst stream: controller off, frozen (observe-only: must be
+    token-identical to off, zero actuations), and on (full actuation).
+    The on-arm must actually traverse the degradation ladder (mode
+    transitions > 0) and -- because tau rides through the jitted steps as
+    a traced operand and the warm pass has already compiled every rule
+    tier it visits -- trigger ZERO recompiles during the measured run."""
+    n = max(n_requests, 16)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=24,
+                         min_new=16, max_new=28)
+    # warm every arm with the full stream: the controller's trajectory is
+    # deterministic, so the warm on-run compiles every (bucket, rule-tier)
+    # variant the measured on-run will visit
+    for mode in ("off", "frozen", "on"):
+        run_policy_stream(cfg, params, reqs, mode=mode, draft_len=8)
+    off = run_policy_stream(cfg, params, reqs, mode="off", draft_len=8)
+    frozen = run_policy_stream(cfg, params, reqs, mode="frozen", draft_len=8)
+    on = run_policy_stream(cfg, params, reqs, mode="on", draft_len=8)
+    identical = frozen["tokens"] == off["tokens"]
+    pol = on["policy"]
+    print(f"serve_policy_off,{off['wall_s']*1e6:.0f},"
+          f"preemptions={off['preemptions']}"
+          f";p99_step_us={off['step_p99_us']:.0f}"
+          f";lamp_rate={off['lamp_rate']:.4f}"
+          f";kv_util={off['kv_util_mean']:.2f}")
+    print(f"serve_policy_frozen,{frozen['wall_s']*1e6:.0f},"
+          f"outputs_identical={identical}"
+          f";actuations={frozen['policy']['actuations']}"
+          f";mode={frozen['policy']['mode']}")
+    print(f"serve_policy_on,{on['wall_s']*1e6:.0f},"
+          f"preemptions={on['preemptions']}"
+          f";p99_step_us={on['step_p99_us']:.0f}"
+          f";lamp_rate={on['lamp_rate']:.4f}"
+          f";mode={pol['mode']}"
+          f";transitions={pol['mode_transitions']}"
+          f";actuations={pol['actuations']}"
+          f";tau_mean={pol['tau_mean']:.4f}"
+          f";draft_len={pol['draft_len']}"
+          f";compiles={on['compiles']}")
+    rate_delta = on["lamp_rate"] - off["lamp_rate"]
+    print(f"serve_policy_degradation,0,"
+          f"preempt_off={off['preemptions']};preempt_on={on['preemptions']}"
+          f";p99_off_us={off['step_p99_us']:.0f}"
+          f";p99_on_us={on['step_p99_us']:.0f}"
+          f";lamp_rate_delta={rate_delta:+.4f}")
+    if not identical:
+        raise SystemExit("frozen-controller outputs diverged from "
+                         "controller-off baseline")
+    if frozen["policy"]["actuations"] != 0:
+        raise SystemExit("frozen controller actuated")
+    if pol["mode_transitions"] == 0:
+        raise SystemExit("burst load did not trigger any policy mode "
+                         "transition")
+    if on["compiles"] != 0:
+        raise SystemExit(f"policy actuation triggered {on['compiles']} "
+                         f"recompiles after warmup (tau must ride as a "
+                         f"traced operand)")
+    # the on-arm's token stream diverges from off once the rule tier drops
+    # (that IS the degradation), so preemption counts can wobble by a
+    # couple of events; the invariant is "no meaningful regression"
+    if on["preemptions"] > off["preemptions"] + 2:
+        raise SystemExit("controller-on preempted meaningfully more than "
+                         "controller-off under the same burst")
+    if on["lamp_rate"] > off["lamp_rate"] + 0.10:
+        raise SystemExit(f"controller-on recompute rate {on['lamp_rate']:.4f} "
+                         f"exceeded the bounded-increase budget")
+    return on
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -361,6 +480,9 @@ def main():
     ap.add_argument("--obs-only", action="store_true",
                     help="run only the observability-cost section (the CI "
                          "obs CSV artifact)")
+    ap.add_argument("--policy-only", action="store_true",
+                    help="run only the adaptive-policy burst section (the "
+                         "CI policy-bench CSV artifact)")
     args = ap.parse_args()
 
     cfg = reduce_cfg(get_config("gpt2"))
@@ -374,6 +496,9 @@ def main():
         return
     if args.obs_only:
         bench_obs(cfg, params, rng, args.requests)
+        return
+    if args.policy_only:
+        bench_policy(cfg, params, rng, args.requests)
         return
     results = {}
     for mode in ("static", "engine"):
@@ -408,6 +533,8 @@ def main():
     bench_speculative(cfg, params, rng, args.requests)
 
     bench_obs(cfg, params, rng, args.requests)
+
+    bench_policy(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

@@ -74,17 +74,22 @@ def _as_offset(offset):
     return offset[:, None, None, None]  # (B,1,1,1) against (tq,1)/(1,tk)
 
 
-def _select(y: jnp.ndarray, site: LampSite, where, row_lengths=None) -> jnp.ndarray:
+def _select(y: jnp.ndarray, site: LampSite, where, row_lengths=None,
+            tau=None) -> jnp.ndarray:
+    """`tau` overrides `site.tau`; it may be a traced jax scalar (the policy
+    controller's per-layer threshold), in which case it stays out of the jit
+    cache key and can move every step without a recompile."""
     if not site.enabled or site.rule == "none":
         return jnp.zeros(y.shape, bool)
+    tau = site.tau if tau is None else tau
     if site.rule == "strict":
-        return L.select_softmax_strict(y, site.tau, where=where)
+        return L.select_softmax_strict(y, tau, where=where)
     if site.rule == "relaxed":
-        return L.select_softmax_relaxed(y, site.tau, where=where)
+        return L.select_softmax_relaxed(y, tau, where=where)
     if site.rule == "relaxed_ln":
         if row_lengths is None:
             raise ValueError("relaxed_ln needs row_lengths")
-        return L.select_softmax_relaxed_ln(y, site.tau, row_lengths,
+        return L.select_softmax_relaxed_ln(y, tau, row_lengths,
                                            n_ref=site.n_ref, where=where)
     if site.rule == "random":  # control arm (paper App C.4): caller resamples
         raise ValueError("random rule is handled by attention_lamp(random_key=...)")
@@ -105,11 +110,14 @@ def attention_reference(q, k, v, *, causal: bool = True, scale: Optional[float] 
 def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
                    scale: Optional[float] = None, window: Optional[int] = None,
                    offset=0, random_key: Optional[jax.Array] = None,
-                   reduce: bool = True) -> Tuple[jnp.ndarray, AttnAux]:
+                   reduce: bool = True, tau=None) -> Tuple[jnp.ndarray, AttnAux]:
     """Materialized-softmax LAMP attention (the paper's benchmark setting).
 
     With `random_key`, runs the App C.4 control: the *number* of recomputed
     products matches the LAMP rule, but positions are chosen at random.
+
+    `tau` (optional, possibly traced) overrides `site.tau` -- the serving
+    policy controller's live per-layer threshold.
 
     With `reduce=False`, `aux.n_selected` / `aux.n_valid` are (B, Tq) arrays
     (summed over heads and keys) instead of scalars, so callers serving
@@ -140,7 +148,7 @@ def attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
     else:
         row_lengths = jnp.full((B, H, Tq), Tk)
 
-    mask = _select(y_low, site, wb, row_lengths)
+    mask = _select(y_low, site, wb, row_lengths, tau=tau)
     if random_key is not None:
         # Keep per-row counts, randomize positions among valid slots.
         n_sel = jnp.sum(mask, axis=-1, keepdims=True)
@@ -378,7 +386,7 @@ def chunked_attention_lamp(q, k, v, site: LampSite, *, causal: bool = True,
 def decode_attention_lamp(q, k_cache, v_cache, length, site: LampSite,
                           *, scale: Optional[float] = None,
                           window: Optional[int] = None, reduce: bool = True,
-                          ) -> Tuple[jnp.ndarray, AttnAux]:
+                          tau=None) -> Tuple[jnp.ndarray, AttnAux]:
     """Single-token decode: q (B, H, 1, D) against cache (B, H, S, D).
 
     `length` (B,) = number of valid cache entries per sequence. LAMP rule (9)
@@ -387,6 +395,7 @@ def decode_attention_lamp(q, k_cache, v_cache, length, site: LampSite,
 
     With `reduce=False`, aux counts are per-sequence (B,) arrays (summed over
     heads) so the serving engine can report per-request recompute rates.
+    `tau` (optional, possibly traced) overrides `site.tau`.
     """
     q = jnp.asarray(q, jnp.float32)
     B, H, Tq, D = q.shape
@@ -401,7 +410,8 @@ def decode_attention_lamp(q, k_cache, v_cache, length, site: LampSite,
     if site.enabled:
         y_low = dot_ps(qs, kt, site.mu, granularity=site.granularity)
         mask = _select(y_low, site, ok,
-                       row_lengths=jnp.broadcast_to(length[:, None, None], (B, H, Tq)))
+                       row_lengths=jnp.broadcast_to(length[:, None, None], (B, H, Tq)),
+                       tau=tau)
         y_exact = jnp.matmul(qs, kt)
         y = jnp.where(mask, y_exact, y_low)
     else:

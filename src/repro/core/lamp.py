@@ -81,13 +81,20 @@ def select_softmax_relaxed(y: jnp.ndarray, tau: float,
                                 the criterion value |0|*e^0 = 0 never selects)
         q_j = s_j > log(tau) + max_i s_i
     Independent of the softmax normalizer -> online-softmax compatible.
+
+    `tau` may be a traced jax scalar (the serving policy controller threads
+    per-layer thresholds through the jitted steps); the value range is then
+    the caller's responsibility. The general log-space comparison reproduces
+    the static tau == 0 branch exactly: log(0) = -inf makes the threshold
+    -inf, selecting every finite s (every nonzero in-domain product).
     """
-    if not (0.0 <= tau < 1.0):
+    static_tau = isinstance(tau, (int, float))
+    if static_tau and not (0.0 <= tau < 1.0):
         raise ValueError(f"relaxed LAMP needs 0 <= tau < 1, got {tau}")
     s = y + jnp.log(jnp.abs(y))  # -inf at y == 0 by IEEE semantics
     s = _masked(s, where, _NEG_INF)
     smax = jnp.max(s, axis=axis, keepdims=True)
-    if tau == 0.0:
+    if static_tau and tau == 0.0:
         mask = jnp.isfinite(s)  # select everything nonzero in-domain
     else:
         mask = s > (jnp.log(tau) + smax)

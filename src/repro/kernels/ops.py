@@ -51,18 +51,20 @@ def flash_decode(q, k_cache, v_cache, length, *, mu: int = 7, tau: float = 0.05,
 
 
 def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths, site,
-                           *, window=None, interpret=None):
+                           *, tau=None, window=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
-                                   site, window=window, interpret=interpret)
+                                   site, tau=tau, window=window,
+                                   interpret=interpret)
 
 
 def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts, site,
-                            *, window=None, block_q=None, interpret=None):
+                            *, tau=None, window=None, block_q=None,
+                            interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
-                                    site, window=window, block_q=block_q,
-                                    interpret=interpret)
+                                    site, tau=tau, window=window,
+                                    block_q=block_q, interpret=interpret)
 
 
 def ps_matmul(a, b, *, mu: int = 7, block_m: int = 128, block_n: int = 128,

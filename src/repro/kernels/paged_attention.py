@@ -101,10 +101,13 @@ def _y_low(q, k, mu: int, granularity: int):
     return acc
 
 
-def _select(y_low, ok, smax, m_low, l_low, n_row, *, rule: str, tau: float,
+def _select(y_low, ok, smax, m_low, l_low, n_row, *, rule: str, tau,
             n_ref: int):
     """LAMP look-ahead mask on one logits tile from pass-1 row stats.
-    smax / m_low / l_low / n_row broadcast against y_low's rows."""
+    smax / m_low / l_low / n_row broadcast against y_low's rows. `tau` may
+    be a traced scalar (read off the kernel's scalar-prefetch operand): the
+    general log-space comparison then reproduces the static tau == 0 branch
+    via log(0) = -inf (threshold -inf selects every finite s)."""
     if rule == "none":
         return jnp.zeros(y_low.shape, bool)
     if rule == "strict":
@@ -112,7 +115,7 @@ def _select(y_low, ok, smax, m_low, l_low, n_row, *, rule: str, tau: float,
         return ok & (2.0 * z * (1.0 - z) * jnp.abs(y_low) > tau)
     s = y_low + jnp.log(jnp.abs(y_low))      # -inf at y == 0: never selects
     if rule == "relaxed":
-        if tau == 0.0:
+        if isinstance(tau, (int, float)) and tau == 0.0:
             return ok & jnp.isfinite(s)
         return ok & (s > jnp.log(tau) + smax)
     if rule == "relaxed_ln":
@@ -171,9 +174,9 @@ def _dec_stats_kernel(bt_ref, len_ref, q_ref, k_ref, stats_ref,
         stats_ref[0, 2] = l_ref[...]
 
 
-def _dec_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, stats_ref,
+def _dec_kernel(bt_ref, len_ref, tau_ref, q_ref, k_ref, v_ref, stats_ref,
                 o_ref, nsel_ref, acc_ref, m_ref, l_ref, cnt_ref,
-                *, H, bs, n_k, lamp, mu, granularity, rule, tau, n_ref_ln,
+                *, H, bs, n_k, lamp, mu, granularity, rule, n_ref_ln,
                 scale, window):
     i, j = pl.program_id(0), pl.program_id(1)
 
@@ -195,7 +198,7 @@ def _dec_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, stats_ref,
         if lamp:
             y_low = _y_low(q, k, mu, granularity)
             sel = _select(y_low, ok, stats_ref[0, 0], stats_ref[0, 1],
-                          stats_ref[0, 2], L, rule=rule, tau=tau,
+                          stats_ref[0, 2], L, rule=rule, tau=tau_ref[0],
                           n_ref=n_ref_ln)
             if rule == "none":
                 y = y_low
@@ -227,7 +230,8 @@ def _dec_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, stats_ref,
 
 @functools.partial(jax.jit, static_argnames=("site", "window", "interpret"))
 def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
-                           site: LampSite, *, window: Optional[int] = None,
+                           site: LampSite, *, tau=None,
+                           window: Optional[int] = None,
                            interpret: bool = True,
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One decode step straight off the paged arena (no pre-gather).
@@ -237,6 +241,11 @@ def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
     new token's KV already written, so valid positions are [0, lengths[r])).
     Returns (out (R, H, 1, hd) float32, n_selected (R,) float32 summed over
     heads) -- the same contract as ``decode_attention_lamp(reduce=False)``.
+
+    `tau` (optional *traced* scalar) overrides the static ``site.tau``: it
+    rides into the selection kernel as a third scalar-prefetch operand, so
+    the policy controller can move the threshold every step without the jit
+    cache key (site is static) ever changing.
     """
     R, H, Tq, hd = q.shape
     if Tq != 1:
@@ -248,12 +257,14 @@ def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
     qf = q.reshape(R * H, 1, hd)
     bt = block_tables.astype(jnp.int32)
     lens = lengths.astype(jnp.int32)
+    tau_arr = jnp.asarray(site.tau if tau is None else tau,
+                          jnp.float32).reshape((1,))
     lamp = bool(site.enabled)
     # rule "none" keeps the y_low softmax but selects nothing: the look-ahead
     # stats pass would be dead work, so only run it for a selecting rule
     need_stats = lamp and site.rule != "none"
 
-    def kv_map(i, j, bt_ref, len_ref):
+    def kv_map(i, j, bt_ref, len_ref, *_):
         r = i // H
         L = len_ref[r]
         hi = (L - 1) // bs
@@ -285,10 +296,10 @@ def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
     out, nsel = pl.pallas_call(
         functools.partial(_dec_kernel, H=H, bs=bs, n_k=n_max, lamp=lamp,
                           mu=site.mu, granularity=site.granularity,
-                          rule=site.rule, tau=site.tau, n_ref_ln=site.n_ref,
+                          rule=site.rule, n_ref_ln=site.n_ref,
                           scale=scale, window=window),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(R * H, n_max),
             in_specs=[q_spec, kv_spec, kv_spec, stats_spec],
             out_specs=[
@@ -307,7 +318,7 @@ def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
             jax.ShapeDtypeStruct((R * H, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(bt, lens, qf, arena_k, arena_v, stats)
+    )(bt, lens, tau_arr, qf, arena_k, arena_v, stats)
     return (out.reshape(R, H, 1, hd),
             jnp.sum(nsel.reshape(R, H), axis=1))
 
@@ -364,10 +375,10 @@ def _pre_stats_kernel(bt_ref, starts_ref, q_ref, k_ref,
         l_o[0] = l_ref[...]
 
 
-def _pre_kernel(bt_ref, starts_ref, q_ref, k_ref, v_ref,
+def _pre_kernel(bt_ref, starts_ref, tau_ref, q_ref, k_ref, v_ref,
                 smax_ref, mlow_ref, llow_ref, o_ref, nsel_ref,
                 acc_ref, m_ref, l_ref, cnt_ref,
-                *, H, bs, wq, n_k, lamp, mu, granularity, rule, tau,
+                *, H, bs, wq, n_k, lamp, mu, granularity, rule,
                 n_ref_ln, scale, window, Tk):
     i, t, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
@@ -392,7 +403,7 @@ def _pre_kernel(bt_ref, starts_ref, q_ref, k_ref, v_ref,
             n_row = jnp.clip(qi[:, :1] + 1, 0, Tk if window is None else window)
             sel = _select(y_low, ok, smax_ref[0][:, None],
                           mlow_ref[0][:, None], llow_ref[0][:, None], n_row,
-                          rule=rule, tau=tau, n_ref=n_ref_ln)
+                          rule=rule, tau=tau_ref[0], n_ref=n_ref_ln)
             if rule == "none":
                 y = y_low
             else:
@@ -424,7 +435,8 @@ def _pre_kernel(bt_ref, starts_ref, q_ref, k_ref, v_ref,
 @functools.partial(jax.jit, static_argnames=("site", "window", "block_q",
                                              "interpret"))
 def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
-                            site: LampSite, *, window: Optional[int] = None,
+                            site: LampSite, *, tau=None,
+                            window: Optional[int] = None,
                             block_q: Optional[int] = None,
                             interpret: bool = True,
                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -437,6 +449,10 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
     caller. Returns (out (B, H, W, hd) float32, n_selected (B, W) float32
     summed over heads and keys) -- the ``attention_lamp(reduce=False)``
     telemetry contract.
+
+    `tau` (optional *traced* scalar) overrides the static ``site.tau`` via
+    a third scalar-prefetch operand into the selection pass, keeping live
+    threshold moves out of the jit cache key (see paged_decode_attention).
     """
     B, H, W, hd = q.shape
     _, bs, Hkv, _ = arena_k.shape
@@ -451,10 +467,12 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
     qf = q.reshape(B * H, W, hd)
     bt = block_tables.astype(jnp.int32)
     st = starts.astype(jnp.int32)
+    tau_arr = jnp.asarray(site.tau if tau is None else tau,
+                          jnp.float32).reshape((1,))
     lamp = bool(site.enabled)
     need_stats = lamp and site.rule != "none"   # as in the decode variant
 
-    def kv_map(i, t, j, bt_ref, starts_ref):
+    def kv_map(i, t, j, bt_ref, starts_ref, *_):
         b = i // H
         q0 = starts_ref[b] + t * wq
         hi = jnp.minimum((q0 + wq - 1) // bs, n_max - 1)
@@ -488,10 +506,10 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
     out, nsel = pl.pallas_call(
         functools.partial(_pre_kernel, H=H, bs=bs, wq=wq, n_k=n_max,
                           lamp=lamp, mu=site.mu, granularity=site.granularity,
-                          rule=site.rule, tau=site.tau, n_ref_ln=site.n_ref,
+                          rule=site.rule, n_ref_ln=site.n_ref,
                           scale=scale, window=window, Tk=Tk),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(B * H, n_q, n_max),
             in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, row_spec],
             out_specs=[
@@ -510,7 +528,7 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
             jax.ShapeDtypeStruct((B * H, W), jnp.float32),
         ],
         interpret=interpret,
-    )(bt, st, qf, arena_k, arena_v, smax, m_low, l_low)
+    )(bt, st, tau_arr, qf, arena_k, arena_v, smax, m_low, l_low)
     return (out.reshape(B, H, W, hd),
             jnp.sum(nsel.reshape(B, H, W), axis=1))
 

@@ -33,7 +33,8 @@ import numpy as np
 from repro.configs import get_config, list_archs, reduced as reduce_cfg
 from repro.models import api
 from repro.obs import ObsConfig
-from repro.serving import EngineConfig, LampEngine, SamplingParams
+from repro.serving import (EngineConfig, LampEngine, PolicyConfig,
+                           SamplingParams)
 from repro.serving.engine import TEXT_FAMILIES
 
 
@@ -157,6 +158,20 @@ def main():
                          "non-speculative decoding)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="speculative draft tokens per sequence per round")
+    ap.add_argument("--policy", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="adaptive LAMP policy loop: actuate per-layer "
+                         "thresholds toward --target-recompute-rate every "
+                         "step (traced operands, zero recompiles) and "
+                         "degrade draft length / rule tier under KV-pool "
+                         "pressure")
+    ap.add_argument("--target-recompute-rate", type=float, default=0.05,
+                    help="per-layer LAMP recompute-rate setpoint the "
+                         "policy controller steers tau toward")
+    ap.add_argument("--latency-slo", type=float, default=0.0,
+                    help="step-latency SLO in seconds; exceeding it is "
+                         "pressure that degrades the policy mode (0 = no "
+                         "latency signal)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="sample from the top-k logits only (0 = "
                          "unfiltered); also the filter the speculative "
@@ -193,6 +208,9 @@ def main():
                  f"(<= cfg.max_seq {cfg.max_seq}) or shrink the request sizes")
     obs = ObsConfig(trace=bool(args.trace_out), trace_path=args.trace_out,
                     jax_profile_dir=args.jax_profile)
+    policy = PolicyConfig(enabled=args.policy,
+                          target_rate=args.target_recompute_rate,
+                          latency_slo_s=args.latency_slo)
     engine = LampEngine(cfg, params, EngineConfig(
         block_size=args.block_size, n_blocks=args.n_blocks,
         max_model_len=max_len, use_lamp=not args.no_lamp,
@@ -200,7 +218,7 @@ def main():
         prefix_cache=args.prefix_cache,
         chunked_prefill=args.chunked_prefill,
         kernel=args.kernel, speculative=args.speculative,
-        draft_len=args.draft_len, obs=obs))
+        draft_len=args.draft_len, obs=obs, policy=policy))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -208,7 +226,8 @@ def main():
           f"qps={args.qps} requests={args.num_requests} "
           f"pool={engine.pool.num_total}x{engine.pool.block_size} blocks "
           f"prefix_cache={args.prefix_cache} "
-          f"chunked_prefill={args.chunked_prefill} kernel={args.kernel}")
+          f"chunked_prefill={args.chunked_prefill} kernel={args.kernel} "
+          f"policy={args.policy}")
 
     with engine.obs.profile():
         outputs = serve_stream(engine, stream,
@@ -235,7 +254,8 @@ def main():
           f"tokens), {s['blocks_saved']} blocks saved / "
           f"{s['blocks_allocated']} allocated, {s['cow_copies']} COW copies, "
           f"{s['cache_evictions']} evictions, "
-          f"{s['prefill_chunks']} prefill chunks")
+          f"{s['prefill_chunks']} prefill chunks, "
+          f"{s['resume_cached_tokens']} resume-cached tokens")
     print(f"[serve] LAMP recompute rate: aggregate "
           f"{s['lamp_recompute_rate']:.4f}, per-request mean {mean_rate:.4f}")
     rates = s["lamp_layer_rates"]
@@ -252,6 +272,13 @@ def main():
     print("[serve] phase wall time: "
           + "  ".join(f"{name}={p['mean_us']:.0f}us x{p['count']}"
                       for name, p in phases))
+    if args.policy:
+        p = s["policy"]
+        print(f"[serve] policy: mode={p['mode']} "
+              f"({p['mode_transitions']} transitions, "
+              f"{p['actuations']} actuations), tau mean {p['tau_mean']:.4f} "
+              f"[{p['tau_min']:.4f}, {p['tau_max']:.4f}], "
+              f"draft_len={p['draft_len']}")
     if args.speculative:
         acc = [o.spec_acceptance_rate for o in outputs if o.spec_drafted]
         print(f"[serve] speculative: {s['spec_rounds']} rounds, "

@@ -246,7 +246,8 @@ def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
                                     block_tables, lengths,
                                     lamp_site: LampSite,
                                     window: Optional[int] = None,
-                                    kernel: str = "gather"):
+                                    kernel: str = "gather",
+                                    tau=None):
     """Single-token decode against a paged KV arena (one layer).
 
     x: (R, 1, d) hidden states for R slots of a continuous batch.
@@ -266,6 +267,9 @@ def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
     blocks directly through the block-table index map (no gather, masked
     blocks skipped); falls back to gather for sites the kernel does not
     implement (the benchmark-only "random" rule).
+    tau: optional traced scalar overriding lamp_site.tau (the serving policy
+    controller threads per-layer thresholds through the jitted steps so
+    moving them never recompiles).
     Returns (out, arena_k, arena_v, n_selected (R,), n_valid (R,)).
     """
     R = x.shape[0]
@@ -285,7 +289,8 @@ def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
         from repro.kernels import ops as KOPS
         eff = lengths + 1
         out, nsel = KOPS.paged_decode_attention(
-            qh, arena_k, arena_v, block_tables, eff, lamp_site, window=window)
+            qh, arena_k, arena_v, block_tables, eff, lamp_site, tau=tau,
+            window=window)
         cap = eff if window is None else jnp.minimum(eff, window)
         nval = (cap * H).astype(jnp.float32)
     else:
@@ -294,7 +299,8 @@ def paged_attention_decode_sublayer(cfg, p, x, *, arena_k, arena_v,
         kh = _repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)     # (R,H,S,hd)
         vh = _repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
         out, aux = A.decode_attention_lamp(qh, kh, vh, lengths + 1, lamp_site,
-                                           window=window, reduce=False)
+                                           window=window, reduce=False,
+                                           tau=tau)
         nsel, nval = aux.n_selected, aux.n_valid
     out = jnp.swapaxes(out, 1, 2).reshape(R, 1, H * hd).astype(x.dtype)
     return out @ p["wo"], arena_k, arena_v, nsel, nval

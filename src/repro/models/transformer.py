@@ -325,7 +325,8 @@ def init_paged_cache(cfg, n_blocks: int, block_size: int,
 def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
                   block_tables: jnp.ndarray, lengths: jnp.ndarray, *,
                   use_lamp: bool = True, moe_groups: int = 1,
-                  kernel: str = "gather", per_layer: bool = False):
+                  kernel: str = "gather", per_layer: bool = False,
+                  taus=None):
     """Prefill a padded batch of prompts into the paged arena.
 
     tokens: (B, S) left-aligned prompts padded to the bucket length S;
@@ -344,14 +345,15 @@ def paged_prefill(cfg, params, tokens: jnp.ndarray, arena: Dict[str, Any],
     return paged_prefill_window(cfg, params, tokens, arena, block_tables,
                                 starts, lengths, use_lamp=use_lamp,
                                 moe_groups=moe_groups, kernel=kernel,
-                                per_layer=per_layer)
+                                per_layer=per_layer, taus=taus)
 
 
 def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
                          arena: Dict[str, Any], block_tables: jnp.ndarray,
                          starts: jnp.ndarray, lengths: jnp.ndarray, *,
                          use_lamp: bool = True, moe_groups: int = 1,
-                         kernel: str = "gather", per_layer: bool = False):
+                         kernel: str = "gather", per_layer: bool = False,
+                         taus=None):
     """Prefill a *window* of each prompt against an existing block table.
 
     Row b runs tokens at absolute positions starts[b] .. starts[b] +
@@ -384,12 +386,15 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
     covering the KQ products actually computed in this window. With
     `per_layer=True` the counts keep their layer axis -- (L, B) instead of
     (B,) -- so serving can attribute recompute work per layer per request.
+    `taus` is an optional (L,) float32 array of per-layer LAMP thresholds
+    overriding the static site tau -- a *traced operand*, so the serving
+    policy controller can move thresholds every step without recompiling.
     """
     B = tokens.shape[0]
     x, arena, counts = _paged_window_apply(
         cfg, params, tokens, arena, block_tables, starts, lengths,
         use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel,
-        per_layer=per_layer)
+        per_layer=per_layer, taus=taus)
     x_last = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
     logits = LY.unembed(cfg, params["embed"], x_last)
     return logits, arena, counts
@@ -399,7 +404,8 @@ def paged_verify_window(cfg, params, tokens: jnp.ndarray,
                         arena: Dict[str, Any], block_tables: jnp.ndarray,
                         starts: jnp.ndarray, lengths: jnp.ndarray, *,
                         use_lamp: bool = True, moe_groups: int = 1,
-                        kernel: str = "gather", per_layer: bool = False):
+                        kernel: str = "gather", per_layer: bool = False,
+                        taus=None):
     """Multi-query decode-verify step: the speculative verifier.
 
     Identical computation to `paged_prefill_window` -- row b runs `tokens`
@@ -422,20 +428,25 @@ def paged_verify_window(cfg, params, tokens: jnp.ndarray,
     x, arena, counts = _paged_window_apply(
         cfg, params, tokens, arena, block_tables, starts, lengths,
         use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel,
-        per_layer=per_layer)
+        per_layer=per_layer, taus=taus)
     logits = LY.unembed(cfg, params["embed"], x)
     return logits, arena, counts
 
 
 def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
                         lengths, *, use_lamp, moe_groups, kernel,
-                        per_layer: bool = False):
+                        per_layer: bool = False, taus=None):
     """Shared window forward: runs the block stack over one window per row
     and returns the final-norm hidden states (B, W, d), the updated arena,
     and per-row LAMP (n_selected, n_valid) -- summed over layers by
     default, or stacked per layer as (L, B) arrays when `per_layer=True`
     (the scan already produces the layer axis; the flag only skips the
-    reduction, so the telemetry costs nothing extra on device)."""
+    reduction, so the telemetry costs nothing extra on device).
+
+    `taus` ((L,) float32, optional) carries per-layer KQ thresholds as scan
+    operands: layer l's attention uses taus[l] instead of the static
+    site.tau, so the serving policy controller can retune thresholds
+    between steps without changing the jit cache key."""
     B, W = tokens.shape
     n_max = block_tables.shape[1]
     bs = arena["k"].shape[2]
@@ -452,10 +463,12 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     from repro.kernels.paged_attention import supports_site
     use_pallas = kernel == "pallas" and supports_site(site)
+    if taus is None:
+        taus = jnp.full((cfg.n_layers,), float(site.tau), jnp.float32)
 
     def body(carry, xs):
         xc = carry
-        p_l, ck, cv = xs
+        p_l, ck, cv, tau_l = xs
         h = LY.apply_norm(cfg, xc, p_l, "ln1")
         q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
         ck = ck.at[blk, off].set(k.astype(ck.dtype))
@@ -465,7 +478,8 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
         if use_pallas:
             from repro.kernels import ops as KOPS
             o, nsel_rows = KOPS.paged_prefill_attention(
-                qh, ck, cv, block_tables, starts, site, window=cfg.window)
+                qh, ck, cv, block_tables, starts, site, tau=tau_l,
+                window=cfg.window)
             if site.enabled:
                 cap = n_max * bs if cfg.window is None else cfg.window
                 nval_rows = jnp.clip(positions + 1, 0, cap
@@ -485,7 +499,7 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
             if site.enabled:
                 o, aux = CA.attention_lamp(qh, kh, vh, site, causal=True,
                                            window=cfg.window, offset=starts,
-                                           reduce=False)
+                                           reduce=False, tau=tau_l)
                 nsel = jnp.sum(aux.n_selected * qmask, axis=1)
                 nval = jnp.sum(aux.n_valid * qmask, axis=1)
             else:
@@ -504,7 +518,7 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
         return xc + m, (ck, cv, nsel, nval)
 
     x, (ks, vs, nsel, nval) = jax.lax.scan(
-        body, x, (params["blocks"], arena["k"], arena["v"]))
+        body, x, (params["blocks"], arena["k"], arena["v"], taus))
     if cfg.norm == "layernorm":
         x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
     else:
@@ -518,7 +532,8 @@ def paged_decode_step(cfg, params, arena: Dict[str, Any],
                       block_tables: jnp.ndarray, lengths: jnp.ndarray,
                       tokens: jnp.ndarray, *, use_lamp: bool = True,
                       moe_dropless: bool = True, moe_groups: int = 1,
-                      kernel: str = "gather", per_layer: bool = False):
+                      kernel: str = "gather", per_layer: bool = False,
+                      taus=None):
     """One continuous-batch decode step over the paged arena.
 
     tokens: (R, 1) last sampled token per slot; lengths: (R,) cache fill
@@ -526,7 +541,9 @@ def paged_decode_step(cfg, params, arena: Dict[str, Any],
     attention path: "gather" (reference, materializes the block-table span)
     or "pallas" (fused kernel, live blocks only). Returns
     (logits (R, 1, V), arena, (n_selected (R,), n_valid (R,))); counts
-    keep their layer axis -- (L, R) -- with `per_layer=True`.
+    keep their layer axis -- (L, R) -- with `per_layer=True`. `taus`
+    ((L,) float32, optional) supplies traced per-layer KQ thresholds --
+    see `paged_prefill_window`.
     """
     x = LY.embed(cfg, params["embed"], tokens, lengths[:, None])
     pol = cfg.lamp
@@ -534,15 +551,17 @@ def paged_decode_step(cfg, params, arena: Dict[str, Any],
                          else LampSite(enabled=False))
     r_site = pol.router if (use_lamp and pol.router.enabled) \
         else LampSite(enabled=False)
+    if taus is None:
+        taus = jnp.full((cfg.n_layers,), float(site.tau), jnp.float32)
 
     def body(carry, xs):
         xc = carry
-        p_l, ck, cv = xs
+        p_l, ck, cv, tau_l = xs
         h = LY.apply_norm(cfg, xc, p_l, "ln1")
         a, ck, cv, nsel, nval = LY.paged_attention_decode_sublayer(
             cfg, p_l["attn"], h, arena_k=ck, arena_v=cv,
             block_tables=block_tables, lengths=lengths, lamp_site=site,
-            kernel=kernel)
+            kernel=kernel, tau=tau_l)
         xc = xc + a
         h = LY.apply_norm(cfg, xc, p_l, "ln2")
         if cfg.family == "moe":
@@ -553,7 +572,7 @@ def paged_decode_step(cfg, params, arena: Dict[str, Any],
         return xc + m, (ck, cv, nsel, nval)
 
     x, (ks, vs, nsel, nval) = jax.lax.scan(
-        body, x, (params["blocks"], arena["k"], arena["v"]))
+        body, x, (params["blocks"], arena["k"], arena["v"], taus))
     if cfg.norm == "layernorm":
         x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
     else:

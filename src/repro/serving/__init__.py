@@ -19,6 +19,10 @@ vLLM-style serving architecture over the repro model stack:
   speculative.py -- LAMP self-draft speculative decoding: low-precision
                   drafter (rule "none") + selective-recompute verifier over
                   the paged pool, standard accept/residual-resample rule
+  policy.py    -- adaptive LAMP policy controller: per-layer threshold
+                  actuation (traced operands, zero recompiles) driven by
+                  recompute-rate telemetry, with load-aware graceful
+                  degradation of draft length and rule tier
 
 Observability lives in `repro.obs` (metrics registry, step-phase tracer,
 compile-event log); every engine carries an `Observability` bundle at
@@ -27,6 +31,9 @@ compile-event log); every engine carries an `Observability` bundle at
 
 from .engine import EngineConfig, LampEngine, RequestOutput
 from .kv_pool import PagedKVPool
+from .policy import (MODE_NAMES, MODE_NORMAL, MODE_RELAXED, MODE_SHED,
+                     PolicyActions, PolicyConfig, PolicyController,
+                     PolicySignals)
 from .request import SamplingParams, Sequence, SequenceStatus
 from .scheduler import Scheduler, StepPlan
 from .speculative import SpecConfig
@@ -34,5 +41,7 @@ from .speculative import SpecConfig
 __all__ = [
     "EngineConfig", "LampEngine", "RequestOutput", "PagedKVPool",
     "SamplingParams", "Sequence", "SequenceStatus", "Scheduler", "StepPlan",
-    "SpecConfig",
+    "SpecConfig", "PolicyConfig", "PolicyController", "PolicySignals",
+    "PolicyActions", "MODE_NAMES", "MODE_NORMAL", "MODE_RELAXED",
+    "MODE_SHED",
 ]

@@ -40,7 +40,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import time
-from typing import Any, Callable, Dict, List, Optional
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +52,7 @@ from repro.obs import ObsConfig, Observability
 
 from . import sampling
 from .kv_pool import PagedKVPool
+from .policy import PolicyConfig, PolicyController, PolicySignals
 from .request import SamplingParams, Sequence, SequenceStatus
 from .scheduler import Scheduler
 from .speculative import SpecConfig, spec_step_fns
@@ -94,6 +96,15 @@ class EngineConfig:
     # always on; obs.trace additionally records step-phase spans for
     # Chrome-trace export (see repro.obs.ObsConfig)
     obs: ObsConfig = ObsConfig()
+    # adaptive LAMP policy loop (serving/policy.py): per-layer thresholds
+    # actuated toward target recompute rates every step (traced operands,
+    # never a recompile), with load-aware degradation of draft length and
+    # rule tier under pool pressure. Off by default: the engine then runs
+    # the static site tau, token-identical to pre-policy behavior
+    policy: PolicyConfig = PolicyConfig()
+    # finished RequestOutputs retained for exact end-of-run percentiles;
+    # older entries age out so a long-lived engine's memory stays bounded
+    finished_retention: int = 1024
 
 
 @dataclasses.dataclass
@@ -108,6 +119,8 @@ class RequestOutput:
     lamp_selected: float
     lamp_valid: float
     num_cached_tokens: int = 0      # prompt tokens served from prefix cache
+                                    # (cross-request hits only)
+    num_resume_cached_tokens: int = 0  # own-KV hits on preemption resume
     spec_drafted: int = 0           # tokens drafted for this request
     spec_accepted: int = 0          # drafted tokens the verifier accepted
     # per-layer LAMP breakdown (length n_layers; sums to the scalars above)
@@ -163,24 +176,27 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
     needs a vocab sort per row per step, so batches where every request has
     top_k == 0 (the common case) use the variant that skips it entirely.
     At most two variants compile per (cfg, use_lamp, kernel). LAMP counts
-    come back per layer ((L, B) arrays); the host side reduces them."""
+    come back per layer ((L, B) arrays); the host side reduces them.
+    `taus` is a traced (L,) float32 operand carrying the live per-layer
+    LAMP thresholds -- deliberately *outside* the jit cache key, so the
+    policy controller can move thresholds every step for free."""
     key = (cfg, use_lamp, kernel, use_topk)
     fns = _JIT_CACHE.get(key)
     if fns is None:
-        def _prefill(params, k, v, tokens, bt, starts, lengths, seeds,
+        def _prefill(params, k, v, tokens, bt, starts, lengths, taus, seeds,
                      counts, temps, topks):
             logits, arena, (nsel, nval) = transformer.paged_prefill_window(
                 cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
-                use_lamp=use_lamp, kernel=kernel, per_layer=True)
+                use_lamp=use_lamp, kernel=kernel, per_layer=True, taus=taus)
             nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
                                        top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
 
-        def _decode(params, k, v, bt, lengths, tokens, seeds, counts, temps,
-                    topks):
+        def _decode(params, k, v, bt, lengths, tokens, taus, seeds, counts,
+                    temps, topks):
             logits, arena, (nsel, nval) = transformer.paged_decode_step(
                 cfg, params, {"k": k, "v": v}, bt, lengths, tokens,
-                use_lamp=use_lamp, kernel=kernel, per_layer=True)
+                use_lamp=use_lamp, kernel=kernel, per_layer=True, taus=taus)
             nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
                                        top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
@@ -243,10 +259,17 @@ class LampEngine:
             spec_draft_len=econfig.draft_len if econfig.speculative else 0,
             obs=self.obs)
         self._next_id = 0
+        # _seqs holds only *live* sequences: finished ones are pruned in
+        # _collect_finished (their cached-token tallies fold into counters)
+        # so a long-lived engine does not accumulate every request ever
         self._seqs: Dict[int, Sequence] = {}
-        self._finished: List[RequestOutput] = []
-        self._util_samples: List[float] = []
+        self._finished: Deque[RequestOutput] = deque(
+            maxlen=max(1, econfig.finished_retention))
+        # streaming mean of pool utilization (was an unbounded sample list)
+        self._util_sum = 0.0
+        self._util_n = 0
         self._start: Optional[float] = None
+        self._last_step_wall = 0.0
 
         # -- metrics registry: the single source of truth for the engine's
         # cumulative counters (stats() and the legacy attribute properties
@@ -269,6 +292,13 @@ class LampEngine:
             unit="tokens")
         self._c_finished = reg.counter(
             "engine_requests_finished_total", help="requests completed")
+        cached = reg.counter(
+            "engine_cached_tokens_total",
+            help="prompt tokens served from cached KV (prefix = "
+                 "cross-request hits, resume = own KV after preemption)",
+            unit="tokens", labels=("kind",))
+        self._c_cached_prefix = cached.labels("prefix")
+        self._c_cached_resume = cached.labels("resume")
         spec = reg.counter("engine_spec_tokens_total",
                            help="speculative-decoding token flow",
                            labels=("event",))
@@ -298,11 +328,29 @@ class LampEngine:
         # of instantaneous per-layer recompute rates
         self._layer_sel = np.zeros((L,), np.float64)
         self._layer_val = np.zeros((L,), np.float64)
-        from collections import deque
         self.layer_rate_series = deque(maxlen=econfig.obs.series_capacity)
 
         self.spec_config = (SpecConfig(draft_len=econfig.draft_len)
                             if econfig.speculative else None)
+
+        # -- adaptive policy loop: live per-layer thresholds (always
+        # threaded into the jitted steps as a traced operand; without a
+        # controller they simply stay at the static site tau, which is
+        # bit-identical to the pre-policy engine) and, when enabled, the
+        # feedback controller that moves them
+        self._taus = np.full((L,), float(cfg.lamp.kq.tau), np.float32)
+        self._active_rule: Optional[str] = None
+        self._cfg_cache: Dict[str, Any] = {}
+        self.policy: Optional[PolicyController] = None
+        if econfig.policy.enabled:
+            base_rule = cfg.lamp.kq.rule
+            if base_rule == "random":   # serving maps the control arm
+                base_rule = "strict"
+            self.policy = PolicyController(
+                econfig.policy, L, self._taus, base_rule=base_rule,
+                base_draft_len=(econfig.draft_len if econfig.speculative
+                                else 0),
+                obs=self.obs)
 
     # -- legacy counter attributes: views over the metrics registry ----------
 
@@ -371,14 +419,33 @@ class LampEngine:
     # with/without the per-row top-k vocab sort (global caches dedupe, so
     # at most two variants compile per step kind)
 
+    def _serving_cfg(self):
+        """The model config the next step traces with: the base config,
+        unless the policy controller degraded the LAMP rule tier. A rule
+        change swaps a *static* trace argument -- one recompile per tier
+        per bucket, the deliberate last rung of the degradation ladder
+        (tau and draft-length moves are recompile-free)."""
+        rule = self._active_rule
+        if rule is None or not self.cfg.lamp.kq.enabled:
+            return self.cfg
+        if rule == self.cfg.lamp.kq.rule:
+            return self.cfg
+        cfg = self._cfg_cache.get(rule)
+        if cfg is None:
+            pol = self.cfg.lamp
+            cfg = self.cfg.replace(
+                lamp=pol.replace(kq=pol.kq.replace(rule=rule)))
+            self._cfg_cache[rule] = cfg
+        return cfg
+
     def _step_fns(self, seqs: List[Sequence]):
         use_topk = any(s.sampling.top_k > 0 for s in seqs)
-        return _jitted_steps(self.cfg, self.econfig.use_lamp,
+        return _jitted_steps(self._serving_cfg(), self.econfig.use_lamp,
                              self.econfig.kernel, use_topk)
 
     def _spec_fns(self, seqs: List[Sequence]):
         use_topk = any(s.sampling.top_k > 0 for s in seqs)
-        return spec_step_fns(self.cfg, self.econfig.use_lamp,
+        return spec_step_fns(self._serving_cfg(), self.econfig.use_lamp,
                              self.econfig.kernel, self.spec_config,
                              use_topk)
 
@@ -415,6 +482,7 @@ class LampEngine:
         """Run one engine step; returns requests finished by this step."""
         if self._start is None:
             self._start = self._now()
+        t0 = self._now()
         with self.obs.span("schedule"):
             plan = self.scheduler.schedule()
         if plan is None:
@@ -431,10 +499,44 @@ class LampEngine:
             # step is the same progress at a fraction of the compute
             self._step_decode(plan.seqs)
             self._c_decode_steps.inc()
-        self._util_samples.append(self.pool.utilization)
+        self._util_sum += self.pool.utilization
+        self._util_n += 1
         with self.obs.span("emit"):
             done = self._collect_finished(plan.seqs)
+        self._last_step_wall = self._now() - t0
+        if self.policy is not None:
+            self._policy_update()
         return done
+
+    def _policy_update(self) -> None:
+        """Feed this step's telemetry to the controller and apply what it
+        actuated: per-layer thresholds (traced operands, free), the
+        scheduler's draft budget (host int, free), and -- only under SHED
+        -- the LAMP rule tier (a static swap; recompiles once per tier)."""
+        # _account_lamp stamps entries with the step count *before* the
+        # step counter increments (the inc happens after the sub-step
+        # returns), so the entry this step just produced reads
+        # total_steps - 1; anything older means this step had no LAMP
+        # counts (e.g. use_lamp off) and the controller holds its EMA
+        rates = None
+        if (self.layer_rate_series
+                and self.layer_rate_series[-1][0] == self.total_steps - 1):
+            rates = self.layer_rate_series[-1][1]
+        drafted = self.spec_drafted
+        sig = PolicySignals(
+            layer_rates=rates,
+            utilization=self.pool.utilization,
+            preemptions=self.scheduler.num_preemptions,
+            step_latency_s=self._last_step_wall,
+            spec_acceptance=(self.spec_accepted / drafted
+                            if drafted else 0.0))
+        act = self.policy.update(sig)
+        if self.policy.config.frozen:
+            return
+        self._taus = np.asarray(act.taus, np.float32)
+        self._active_rule = act.rule
+        if self.econfig.speculative:
+            self.scheduler.spec_draft_len = act.draft_len
 
     def _batch_arrays(self, seqs: List[Sequence], Bb: int):
         bt = np.zeros((Bb, self.blocks_per_seq), np.int32)
@@ -502,8 +604,8 @@ class LampEngine:
             out = prefill_fn(
                 self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
                 jnp.asarray(bt), jnp.asarray(starts), jnp.asarray(lengths),
-                jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
-                jnp.asarray(topks))
+                jnp.asarray(self._taus), jnp.asarray(seeds),
+                jnp.asarray(counts), jnp.asarray(temps), jnp.asarray(topks))
         with self.obs.span("sync"):
             jax.block_until_ready(out)
             nxt, self.pool.k, self.pool.v, nsel, nval = out
@@ -546,8 +648,8 @@ class LampEngine:
             out = decode_fn(
                 self.params, self.pool.k, self.pool.v, jnp.asarray(bt),
                 jnp.asarray(lengths), jnp.asarray(tokens),
-                jnp.asarray(seeds), jnp.asarray(counts), jnp.asarray(temps),
-                jnp.asarray(topks))
+                jnp.asarray(self._taus), jnp.asarray(seeds),
+                jnp.asarray(counts), jnp.asarray(temps), jnp.asarray(topks))
         with self.obs.span("sync"):
             jax.block_until_ready(out)
             nxt, self.pool.k, self.pool.v, nsel, nval = out
@@ -584,16 +686,18 @@ class LampEngine:
         bt, lengths, tok0, kd, seeds, counts, temps, topks = map(
             jnp.asarray, (bt, lengths, tok0, kd, seeds, counts, temps,
                           topks))
+        taus = jnp.asarray(self._taus)
         draft_fn, verify_fn = self._spec_fns(seqs)
         n0d, n0v = _cache_size(draft_fn), _cache_size(verify_fn)
         with self.obs.span("draft", rows=len(seqs), bucket=[Rb]) as spd:
             d_toks, d_logits, self.pool.k, self.pool.v = draft_fn(
                 self.params, self.pool.k, self.pool.v, bt, lengths, tok0,
-                kd, seeds, counts, temps, topks)
+                kd, taus, seeds, counts, temps, topks)
         with self.obs.span("verify", rows=len(seqs), bucket=[Rb]) as spv:
             out = verify_fn(
                 self.params, self.pool.k, self.pool.v, tok0, d_toks,
-                d_logits, bt, lengths, kd, seeds, counts, temps, topks)
+                d_logits, bt, lengths, kd, taus, seeds, counts, temps,
+                topks)
         with self.obs.span("sync"):
             jax.block_until_ready(out)
             emit, n_acc, self.pool.k, self.pool.v, nsel, nval = out
@@ -610,9 +714,7 @@ class LampEngine:
         for i, seq in enumerate(seqs):
             a = int(n_acc[i])
             seq.spec_drafted += int(draft_lens[i])
-            seq.spec_accepted += a
             self._c_spec_drafted.inc(int(draft_lens[i]))
-            self._c_spec_accepted.inc(a)
             # emit accepted drafts + the verifier's token, stopping at the
             # request's own limits (surplus accepted tokens are dropped and
             # their cache rolls back with the rejected ones)
@@ -623,6 +725,15 @@ class LampEngine:
                 self._c_generated.inc()
                 if seq.should_stop():
                     break
+            # acceptance accounting covers only drafts actually *kept*: a
+            # stop token (or token limit) inside the accepted prefix drops
+            # the surplus, and counting those would overstate the
+            # acceptance rate the policy/scheduler steer by. An early stop
+            # at position j < a keeps j+1 tokens, all of them drafts; a
+            # full emit keeps a drafts + the verifier's token.
+            kept_accepted = min(a, appended)
+            seq.spec_accepted += kept_accepted
+            self._c_spec_accepted.inc(kept_accepted)
             seq.cache_len += appended
             self._c_spec_emitted.inc(appended)
             seq.block_ids = self.pool.rollback(seq.block_ids, seq.cache_len)
@@ -646,14 +757,22 @@ class LampEngine:
                 ttft=seq.ttft(), num_preemptions=seq.num_preemptions,
                 lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid,
                 num_cached_tokens=seq.num_cached_tokens,
+                num_resume_cached_tokens=seq.num_resume_cached_tokens,
                 spec_drafted=seq.spec_drafted,
                 spec_accepted=seq.spec_accepted,
                 lamp_layer_selected=lamp_l_sel,
                 lamp_layer_valid=lamp_l_val)
             self._finished.append(out)
             self._c_finished.inc()
+            self._c_cached_prefix.inc(seq.num_cached_tokens)
+            self._c_cached_resume.inc(seq.num_resume_cached_tokens)
             self._h_latency.observe(out.latency)
             self._h_ttft.observe(out.ttft)
+            # prune the live-sequence map: its cached-token tallies now
+            # live in the counters above, so stats() stays O(live) and the
+            # engine's memory is bounded no matter how many requests it
+            # has ever served
+            self._seqs.pop(seq.req_id, None)
             done.append(out)
         return done
 
@@ -704,7 +823,8 @@ class LampEngine:
         Latency/TTFT percentiles come from the streaming histograms --
         O(buckets) per call, safe to poll under a live stream. Pass
         `exact=True` for end-of-run reporting: percentiles are then
-        computed exactly over every finished request (O(n log n))."""
+        computed exactly over the retained finished requests (the last
+        `finished_retention`; O(n log n))."""
         elapsed = (self._now() - self._start) if self._start else 0.0
         if exact:
             lat = [o.latency for o in self._finished]
@@ -716,9 +836,15 @@ class LampEngine:
             lat_p50 = self._h_latency.quantile(0.5)
             lat_p99 = self._h_latency.quantile(0.99)
             ttft_p50 = self._h_ttft.quantile(0.5)
-        cached = sum(s.num_cached_tokens for s in self._seqs.values())
+        # finished sequences' tallies live in the counters (_seqs holds
+        # only live requests); resume self-hits are reported separately
+        # and excluded from the cross-request hit rate
+        cached = int(self._c_cached_prefix.value) + sum(
+            s.num_cached_tokens for s in self._seqs.values())
+        resume_cached = int(self._c_cached_resume.value) + sum(
+            s.num_resume_cached_tokens for s in self._seqs.values())
         generated = self.generated_tokens
-        n_done = len(self._finished)
+        n_done = int(self._c_finished.value)
         phase = {name: {"mean_us": h.mean * 1e6, "count": h.count}
                  for name, h in self.obs._phase_children.items() if h.count}
         return {
@@ -738,13 +864,14 @@ class LampEngine:
             "blocks_allocated": self.pool.total_allocs,
             "blocks_saved": self.pool.hit_blocks,
             "cached_tokens": cached,
+            "resume_cached_tokens": resume_cached,
             "prefill_tokens_run": self.prefill_tokens_run,
             "cache_hit_rate": cached / max(1, self.prefill_tokens_run
                                            + cached),
             "cow_copies": self.pool.cow_copies,
             "cache_evictions": self.pool.evictions,
-            "kv_util_mean": float(np.mean(self._util_samples))
-            if self._util_samples else 0.0,
+            "kv_util_mean": (self._util_sum / self._util_n
+                             if self._util_n else 0.0),
             "kv_util_peak": self.pool.peak_used / self.pool.num_total,
             "lamp_recompute_rate": (self.agg_lamp_selected /
                                     self.agg_lamp_valid
@@ -771,6 +898,9 @@ class LampEngine:
             "verify_recompute_rate": (self.spec_verify_selected /
                                       self.spec_verify_valid
                                       if self.spec_verify_valid else 0.0),
+            # adaptive policy loop (serving/policy.py)
+            "policy": (self.policy.stats() if self.policy is not None
+                       else {"enabled": False}),
         }
 
     def write_trace(self, path: Optional[str] = None) -> str:
@@ -818,6 +948,7 @@ class LampEngine:
         live = self.stats()["live_requests"]
         raise RuntimeError(
             f"run_to_completion exceeded max_steps={max_steps} with {live} "
-            f"request(s) still live ({len(self._finished)} finished); the "
+            f"request(s) still live ({int(self._c_finished.value)} finished"
+            f"); the "
             f"stream is hung or max_steps is too small\n"
             + self._hang_diagnostic())

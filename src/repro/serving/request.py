@@ -92,8 +92,13 @@ class Sequence:
         # (prefix-cache hits + completed chunks); equals cache_len while the
         # sequence is mid-prefill, frozen at the prefill target afterwards
         self.prefill_cursor = 0
-        # prompt tokens served from the prefix cache (across re-admissions)
+        # prompt tokens served from the prefix cache. Cross-request hits
+        # (first admission) and this sequence re-hitting its *own* KV after
+        # a preemption are tracked separately: resume self-hits are not
+        # avoided work relative to a never-preempted run, so folding them
+        # into num_cached_tokens would inflate the cache hit rate
         self.num_cached_tokens = 0
+        self.num_resume_cached_tokens = 0
         # chain hashes of prefill_tokens(), computed once at admission so
         # per-chunk registration does not rehash the whole prefix
         self.prefix_hashes: List[int] = []

@@ -194,7 +194,13 @@ class Scheduler:
                 seq.block_ids.extend(self.pool.alloc(need_new))
         seq.prefill_cursor = cached
         seq.cache_len = cached
-        seq.num_cached_tokens += cached
+        # a resumed sequence matching blocks it registered at its own
+        # preemption is not a cross-request cache win: count it separately
+        # so the cache hit rate is not double-counted by preemption churn
+        if seq.num_preemptions > 0:
+            seq.num_resume_cached_tokens += cached
+        else:
+            seq.num_cached_tokens += cached
         seq.status = SequenceStatus.PREFILL
         pending.update(hashes[:(cached + window) // bs])
         return window

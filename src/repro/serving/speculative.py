@@ -178,15 +178,15 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
                   use_topk: bool = True):
     """Build (draft_fn, verify_fn) for one engine configuration.
 
-    draft_fn(params, k, v, bt, lengths, tok0, kd, seeds, counts, temps,
-             topks) -> (draft_tokens (R, k), draft_logits (R, k, V),
+    draft_fn(params, k, v, bt, lengths, tok0, kd, taus, seeds, counts,
+             temps, topks) -> (draft_tokens (R, k), draft_logits (R, k, V),
                         arena_k, arena_v)
         runs `draft_len` low-precision paged decode steps (a lax.scan, one
         jitted call), sampling each proposal from the draft distribution
         with the SALT_DRAFT key stream. Rows freeze at their budget kd.
 
     verify_fn(params, k, v, tok0, draft_tokens, draft_logits, bt, lengths,
-              kd, seeds, counts, temps, topks)
+              kd, taus, seeds, counts, temps, topks)
         -> (emit (R, k+1), n_accepted (R,), arena_k, arena_v,
             n_selected (L, R), n_valid (L, R))
         one multi-token paged forward over [last_token, d_1..d_k] at
@@ -194,6 +194,11 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
         rule (rewriting those positions' KV), then `speculative_accept`.
         n_selected/n_valid are the verify pass's per-layer per-row LAMP
         counts (the engine reduces them).
+
+    `taus` ((L,) float32) carries the policy controller's live per-layer
+    LAMP thresholds into the *verify* pass (the draft runs the fixed draft
+    rule, typically "none", so thresholds are irrelevant there); it is a
+    traced operand, so actuation never recompiles.
 
     `use_topk` is a static trace-time switch (as in engine._jitted_steps):
     False skips the per-row top-k vocab sorts for batches where no request
@@ -206,8 +211,9 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
     k = spec.draft_len
     dcfg = draft_model_config(cfg, spec) if use_lamp else cfg
 
-    def _draft(params, ak, av, bt, lengths, tok0, kd, seeds, counts, temps,
-               topks):
+    def _draft(params, ak, av, bt, lengths, tok0, kd, taus, seeds, counts,
+               temps, topks):
+        del taus  # the draft rule is fixed (typically "none": no selection)
         def body(carry, j):
             tok, ak, av = carry
             # frozen rows (j >= kd) rewrite the same tail position with the
@@ -228,14 +234,14 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
         return (jnp.moveaxis(toks, 0, 1), jnp.moveaxis(qlog, 0, 1), ak, av)
 
     def _verify(params, ak, av, tok0, d_toks, d_logits, bt, lengths, kd,
-                seeds, counts, temps, topks):
+                taus, seeds, counts, temps, topks):
         win = jnp.concatenate([tok0[:, None], d_toks], axis=1)   # (R, k+1)
         Wv = spec.verify_width
         if Wv > k + 1:
             win = jnp.pad(win, ((0, 0), (0, Wv - (k + 1))))
         logits, arena, (nsel, nval) = transformer.paged_verify_window(
             cfg, params, win, {"k": ak, "v": av}, bt, lengths, kd + 1,
-            use_lamp=use_lamp, kernel=kernel, per_layer=True)
+            use_lamp=use_lamp, kernel=kernel, per_layer=True, taus=taus)
         emit, n_acc = speculative_accept(
             logits, d_toks, d_logits, kd, seeds, counts, temps,
             topks if use_topk else None)

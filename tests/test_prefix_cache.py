@@ -604,8 +604,11 @@ def test_preempt_between_chunks_resume_suffix_only(model):
     # identical outputs with and without the cache ...
     assert a_on == a_off and b_on == b_off
     # ... but the resume re-used B's registered chunk blocks instead of
-    # re-running the whole prompt
-    assert on.stats()["cached_tokens"] > 0
+    # re-running the whole prompt. Own-KV resume hits are accounted as
+    # resume_cached_tokens (not cached_tokens, which tracks cross-request
+    # prefix sharing only -- no request here shares a prefix)
+    assert on.stats()["resume_cached_tokens"] > 0
+    assert on.stats()["cached_tokens"] == 0
     assert on.prefill_tokens_run < off.prefill_tokens_run
     assert on.pool.num_used == 0 and off.pool.num_used == 0
 

@@ -43,6 +43,15 @@ zero recompiles after warmup (tau is a traced operand), does not
 meaningfully regress preemptions, and keeps the recompute-rate increase
 bounded.
 
+The fused-step section (standalone via --fused-only, the CI fused-step
+CSV artifact) replays one decode-heavy greedy stream (every request
+admitted up front, chunked prefill + speculation on) through the fused
+single-launch mixed step and through its split-execution twin (the same
+mixed plans run through the legacy phase-segregated sub-steps), on both
+kernels. It asserts token identity, strictly fewer kernel launches per
+step, and a smaller jit cache (compiled signatures from cold), and
+reports launches/step plus jit-cache entries for each arm.
+
 The observability section (standalone via --obs-only) replays one stream
 with step-phase tracing ON and OFF, asserts token identity (observability
 must never perturb serving), reports the per-step overhead of tracing, and
@@ -309,6 +318,87 @@ def bench_speculative(cfg, params, rng, n_requests, draft_len=4):
     return on
 
 
+def run_fused_stream(cfg, params, reqs, *, exec_, kernel):
+    """Mixed-plan stream: all requests admitted up front so most steps mix
+    a decode/verify majority with chunked-prefill windows riding along.
+    exec_: "fused" (one launch per step) or "split" (the same plans through
+    the legacy sub-steps). Runs from a cold step-fn cache so compile
+    counts are comparable across arms."""
+    from repro.serving.engine import reset_step_caches
+    from repro.serving.fn_cache import STEP_FNS
+    reset_step_caches()
+    # pool sized to hold the whole batch resident (the auto default fits
+    # ~4 full sequences): this arm measures launch/compile counts, not
+    # preemption churn
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, n_blocks=160, max_model_len=128, max_prefill_tokens=48,
+        max_decode_batch=16, use_lamp=True, kernel=kernel,
+        chunked_prefill=True, speculative=True, draft_len=4,
+        fused_step=True, mixed_exec=exec_))
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    conc, outs = [], []
+    t0 = time.monotonic()
+    while engine.has_unfinished():
+        conc.append(len(engine.scheduler.running))
+        outs.extend(engine.step())
+    wall = time.monotonic() - t0
+    s = engine.stats()
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "wall_s": wall, "steps": s["steps"],
+            "launches": s["launches"],
+            "launches_per_step": s["launches"] / max(1, s["steps"]),
+            "compiles": s["compiles"],
+            "fn_entries": len(STEP_FNS),
+            "mixed_steps": s["mixed_steps"],
+            "mean_concurrency": float(np.mean(conc)) if conc else 0.0}
+
+
+def bench_fused(cfg, params, rng, n_requests):
+    """Fused single-launch mixed step vs its split-execution twin on one
+    decode-heavy greedy stream, both kernels. The twin executes the SAME
+    mixed plans through the legacy sub-steps, so any token divergence is a
+    fused-launch bug, not a scheduling difference."""
+    # speculation accepts several tokens per round, so requests drain fast;
+    # the stream needs headroom to hold >= 8 concurrent sequences mid-run
+    n = max(n_requests, 16)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=40,
+                         min_new=24, max_new=32)
+    for kernel in ("gather", "pallas"):
+        rows = {}
+        for exec_ in ("fused", "split"):
+            r = run_fused_stream(cfg, params, reqs, exec_=exec_,
+                                 kernel=kernel)
+            rows[exec_] = r
+            print(f"serve_fused_{kernel}_{exec_},{r['wall_s']*1e6:.0f},"
+                  f"steps={r['steps']}"
+                  f";launches_per_step={r['launches_per_step']:.2f}"
+                  f";compiles={r['compiles']}"
+                  f";fn_entries={r['fn_entries']}"
+                  f";concurrency={r['mean_concurrency']:.1f}")
+        f, sp = rows["fused"], rows["split"]
+        identical = f["tokens"] == sp["tokens"]
+        print(f"serve_fused_vs_split_{kernel},0,"
+              f"outputs_identical={identical}"
+              f";launches={f['launches']}v{sp['launches']}"
+              f";compiles={f['compiles']}v{sp['compiles']}"
+              f";mixed_steps={f['mixed_steps']}")
+        if not identical:
+            raise SystemExit(f"fused-step outputs diverged from split "
+                             f"execution on kernel={kernel}")
+        if f["mean_concurrency"] < 8:
+            raise SystemExit("fused-step bench fell below 8 concurrent "
+                             "sequences")
+        if f["launches"] >= sp["launches"]:
+            raise SystemExit(f"fused step did not reduce kernel launches "
+                             f"({f['launches']} vs {sp['launches']})")
+        if not 0 < f["compiles"] < sp["compiles"]:
+            raise SystemExit(f"fused step did not shrink the jit cache "
+                             f"({f['compiles']} vs {sp['compiles']} "
+                             f"compiled signatures)")
+    return rows
+
+
 def run_obs_stream(cfg, params, reqs, *, trace):
     """One stream, all requests admitted up front, with tracing on or off
     (the metrics registry itself is always on, by design)."""
@@ -483,6 +573,9 @@ def main():
     ap.add_argument("--policy-only", action="store_true",
                     help="run only the adaptive-policy burst section (the "
                          "CI policy-bench CSV artifact)")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="run only the fused-step vs split-twin section "
+                         "(the CI fused-step CSV artifact)")
     args = ap.parse_args()
 
     cfg = reduce_cfg(get_config("gpt2"))
@@ -499,6 +592,9 @@ def main():
         return
     if args.policy_only:
         bench_policy(cfg, params, rng, args.requests)
+        return
+    if args.fused_only:
+        bench_fused(cfg, params, rng, args.requests)
         return
     results = {}
     for mode in ("static", "engine"):
@@ -531,6 +627,8 @@ def main():
     bench_kernel_paths(cfg, params, rng, args.requests)
 
     bench_speculative(cfg, params, rng, args.requests)
+
+    bench_fused(cfg, params, rng, args.requests)
 
     bench_obs(cfg, params, rng, args.requests)
 

@@ -5,7 +5,11 @@ completions as they finish (not in arrival order -- short requests overtake
 long ones), and prints per-request LAMP recompute rates: the paper's
 telemetry, now observable per serving request.
 
-    PYTHONPATH=src python examples/serve_continuous.py [arch]
+Pass --fused to serve the same burst through the fused single-launch
+mixed step (scheduler emits one mixed prefill+decode+verify plan per
+step; the engine runs it as one bucketed jitted call).
+
+    PYTHONPATH=src python examples/serve_continuous.py [arch] [--fused]
 """
 
 import sys
@@ -22,11 +26,13 @@ from repro.serving import EngineConfig, LampEngine, SamplingParams
 
 
 def main():
-    arch = sys.argv[1] if len(sys.argv) > 1 else "gpt2"
+    args = [a for a in sys.argv[1:] if a != "--fused"]
+    fused = "--fused" in sys.argv[1:]
+    arch = args[0] if args else "gpt2"
     cfg = reduced(get_config(arch))
     params = api.init_params(cfg, jax.random.PRNGKey(0))
     engine = LampEngine(cfg, params, EngineConfig(
-        block_size=8, max_model_len=96, use_lamp=True))
+        block_size=8, max_model_len=96, use_lamp=True, fused_step=fused))
 
     rng = np.random.default_rng(7)
     for i in range(8):
@@ -45,9 +51,11 @@ def main():
                   f"lamp recompute rate {o.lamp_recompute_rate:.4f}, "
                   f"tokens: {o.tokens[:6]}...")
     s = engine.stats()
+    shape = (f"{s['mixed_steps']} mixed, {s['launches']} launches"
+             if fused else
+             f"{s['prefill_steps']} prefill/{s['decode_steps']} decode")
     print(f"[demo] {s['tokens_per_s']:.1f} tok/s over {s['steps']} steps "
-          f"({s['prefill_steps']} prefill/{s['decode_steps']} decode), "
-          f"kv util mean {s['kv_util_mean']:.2%}, "
+          f"({shape}), kv util mean {s['kv_util_mean']:.2%}, "
           f"aggregate lamp rate {s['lamp_recompute_rate']:.4f}")
 
 

@@ -19,6 +19,7 @@ from .flash_decode import flash_decode as _flash_decode
 from .lamp_attention import lamp_flash_attention as _lamp_flash_attention
 from .paged_attention import (
     paged_decode_attention as _paged_decode_attention,
+    paged_mixed_attention as _paged_mixed_attention,
     paged_prefill_attention as _paged_prefill_attention,
 )
 from .ps_matmul import ps_matmul as _ps_matmul
@@ -59,12 +60,21 @@ def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths, site,
 
 
 def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts, site,
-                            *, tau=None, window=None, block_q=None,
-                            interpret=None):
+                            *, tau=None, qlens=None, window=None,
+                            block_q=None, interpret=None):
     interpret = _default_interpret() if interpret is None else interpret
     return _paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
-                                    site, tau=tau, window=window,
+                                    site, tau=tau, qlens=qlens, window=window,
                                     block_q=block_q, interpret=interpret)
+
+
+def paged_mixed_attention(q, arena_k, arena_v, block_tables, starts, qlens,
+                          site, *, tau=None, window=None, block_q=None,
+                          interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged_mixed_attention(q, arena_k, arena_v, block_tables, starts,
+                                  qlens, site, tau=tau, window=window,
+                                  block_q=block_q, interpret=interpret)
 
 
 def ps_matmul(a, b, *, mu: int = 7, block_m: int = 128, block_n: int = 128,

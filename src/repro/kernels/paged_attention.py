@@ -49,7 +49,14 @@ Variants:
       position lengths[r] - 1; grid (R*H, n_max), like ``flash_decode``.
   paged_prefill_attention -- windowed prefill: query tile x block grid
       ((B*H, W/block_q, n_max)) with absolute-position causal masks
-      (query row w of sequence b sits at position starts[b] + w).
+      (query row w of sequence b sits at position starts[b] + w). With the
+      optional per-row ``qlens`` scalar-prefetch operand this is also the
+      *mixed-row* grid: each row carries its own live query count, so one
+      launch covers decode rows (qlen 1), chunked-prefill windows (qlen w)
+      and speculative verify rows (qlen k+1) side by side -- the index map
+      clamps each row's KV walk to its own live block range and ``pl.when``
+      skips tiles/blocks past the row's queries. ``paged_mixed_attention``
+      is the documented alias for that calling convention.
 
 The benchmark-only "random" control rule stays on the gather path
 (``supports_site``).
@@ -327,20 +334,28 @@ def paged_decode_attention(q, arena_k, arena_v, block_tables, lengths,
 # Windowed-prefill variant: query tile x block grid (B*H, n_q, n_max)
 # ---------------------------------------------------------------------------
 
-def _pre_mask(j, q0, bs, wq, window):
+def _pre_mask(j, q0, qe, bs, wq, window):
     """(live, ok, qi): block liveness for the q-tile starting at absolute
-    position q0, and the absolute-position causal mask inside the tile."""
+    position q0 with qe live queries (qe == wq when the row fills the tile),
+    and the absolute-position causal mask inside the tile. A block is live
+    only if it intersects the causal span of the row's *live* queries, so a
+    decode row (qe == 1) in a wide mixed bucket walks exactly the blocks the
+    dedicated decode grid would. Pad queries past qe keep the plain causal
+    mask; their lanes are discarded by the caller, and every block they
+    would have added is a bitwise no-op for live rows (p == 0 everywhere,
+    m/l/acc carried through unchanged), so skipping those blocks leaves
+    live rows bit-identical to the qe == wq walk."""
     qi = q0 + jax.lax.broadcasted_iota(jnp.int32, (wq, bs), 0)
     kj = j * bs + jax.lax.broadcasted_iota(jnp.int32, (wq, bs), 1)
     ok = kj <= qi
-    live = j * bs <= q0 + wq - 1
+    live = (qe > 0) & (j * bs <= q0 + qe - 1)
     if window is not None:
         ok &= kj > qi - window
         live &= (j + 1) * bs - 1 > q0 - window
     return live, ok, qi
 
 
-def _pre_stats_kernel(bt_ref, starts_ref, q_ref, k_ref,
+def _pre_stats_kernel(bt_ref, starts_ref, ql_ref, q_ref, k_ref,
                       smax_o, m_o, l_o, smax_ref, m_ref, l_ref,
                       *, H, bs, wq, n_k, mu, granularity, scale, window):
     i, t, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
@@ -352,7 +367,8 @@ def _pre_stats_kernel(bt_ref, starts_ref, q_ref, k_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q0 = starts_ref[i // H] + t * wq
-    live, ok, _ = _pre_mask(j, q0, bs, wq, window)
+    qe = jnp.clip(ql_ref[i // H] - t * wq, 0, wq)
+    live, ok, _ = _pre_mask(j, q0, qe, bs, wq, window)
 
     @pl.when(live)
     def _block():
@@ -375,7 +391,7 @@ def _pre_stats_kernel(bt_ref, starts_ref, q_ref, k_ref,
         l_o[0] = l_ref[...]
 
 
-def _pre_kernel(bt_ref, starts_ref, tau_ref, q_ref, k_ref, v_ref,
+def _pre_kernel(bt_ref, starts_ref, ql_ref, tau_ref, q_ref, k_ref, v_ref,
                 smax_ref, mlow_ref, llow_ref, o_ref, nsel_ref,
                 acc_ref, m_ref, l_ref, cnt_ref,
                 *, H, bs, wq, n_k, lamp, mu, granularity, rule,
@@ -390,7 +406,8 @@ def _pre_kernel(bt_ref, starts_ref, tau_ref, q_ref, k_ref, v_ref,
         cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     q0 = starts_ref[i // H] + t * wq
-    live, ok, qi = _pre_mask(j, q0, bs, wq, window)
+    qe = jnp.clip(ql_ref[i // H] - t * wq, 0, wq)
+    live, ok, qi = _pre_mask(j, q0, qe, bs, wq, window)
 
     @pl.when(live)
     def _block():
@@ -435,12 +452,12 @@ def _pre_kernel(bt_ref, starts_ref, tau_ref, q_ref, k_ref, v_ref,
 @functools.partial(jax.jit, static_argnames=("site", "window", "block_q",
                                              "interpret"))
 def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
-                            site: LampSite, *, tau=None,
+                            site: LampSite, *, tau=None, qlens=None,
                             window: Optional[int] = None,
                             block_q: Optional[int] = None,
                             interpret: bool = True,
                             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Windowed-prefill attention straight off the paged arena.
+    """Windowed-prefill / mixed-row attention straight off the paged arena.
 
     q: (B, H, W, hd) -- query row w of sequence b sits at absolute position
     starts[b] + w and attends causally to positions 0..starts[b]+w of the
@@ -451,8 +468,17 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
     telemetry contract.
 
     `tau` (optional *traced* scalar) overrides the static ``site.tau`` via
-    a third scalar-prefetch operand into the selection pass, keeping live
+    a scalar-prefetch operand into the selection pass, keeping live
     threshold moves out of the jit cache key (see paged_decode_attention).
+
+    `qlens` (optional (B,) int32, traced) gives each row its own live query
+    count -- the mixed-row convention: a decode row rides in a wide bucket
+    with qlens[b] == 1, a chunked-prefill window with qlens[b] == w, a
+    speculative verify row with qlens[b] == k+1. Rows walk (DMA + compute)
+    only the KV blocks their live queries can see; results at live query
+    positions are bit-identical to qlens == W (skipped blocks are exact
+    no-ops for live rows, see `_pre_mask`). ``qlens=None`` means every row
+    fills the bucket -- the historical behavior, bit-for-bit.
     """
     B, H, W, hd = q.shape
     _, bs, Hkv, _ = arena_k.shape
@@ -467,15 +493,20 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
     qf = q.reshape(B * H, W, hd)
     bt = block_tables.astype(jnp.int32)
     st = starts.astype(jnp.int32)
+    ql = (jnp.full((B,), W, jnp.int32) if qlens is None
+          else qlens.astype(jnp.int32))
     tau_arr = jnp.asarray(site.tau if tau is None else tau,
                           jnp.float32).reshape((1,))
     lamp = bool(site.enabled)
     need_stats = lamp and site.rule != "none"   # as in the decode variant
 
-    def kv_map(i, t, j, bt_ref, starts_ref, *_):
+    def kv_map(i, t, j, bt_ref, starts_ref, ql_ref, *_):
         b = i // H
         q0 = starts_ref[b] + t * wq
-        hi = jnp.minimum((q0 + wq - 1) // bs, n_max - 1)
+        # clamp the walk to the row's live queries in this tile (>= 1 so a
+        # dead tile still resolves to a resident block; pl.when skips it)
+        qe = jnp.clip(ql_ref[b] - t * wq, 1, wq)
+        hi = jnp.minimum((q0 + qe - 1) // bs, n_max - 1)
         lo = 0 if window is None else \
             jnp.minimum(jnp.maximum(q0 - window + 1, 0) // bs, hi)
         return (bt_ref[b, jnp.clip(j, lo, hi)], 0, (i % H) // rep, 0)
@@ -491,7 +522,7 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
                               mu=site.mu, granularity=site.granularity,
                               scale=scale, window=window),
             grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=2,
+                num_scalar_prefetch=3,
                 grid=(B * H, n_q, n_max),
                 in_specs=[q_spec, kv_spec],
                 out_specs=[row_spec] * 3,
@@ -499,7 +530,7 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
             ),
             out_shape=[row_shape] * 3,
             interpret=interpret,
-        )(bt, st, qf, arena_k)
+        )(bt, st, ql, qf, arena_k)
     else:
         smax = m_low = l_low = jnp.zeros((B * H, W), jnp.float32)
 
@@ -509,7 +540,7 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
                           rule=site.rule, n_ref_ln=site.n_ref,
                           scale=scale, window=window, Tk=Tk),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=(B * H, n_q, n_max),
             in_specs=[q_spec, kv_spec, kv_spec, row_spec, row_spec, row_spec],
             out_specs=[
@@ -528,9 +559,24 @@ def paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
             jax.ShapeDtypeStruct((B * H, W), jnp.float32),
         ],
         interpret=interpret,
-    )(bt, st, tau_arr, qf, arena_k, arena_v, smax, m_low, l_low)
+    )(bt, st, ql, tau_arr, qf, arena_k, arena_v, smax, m_low, l_low)
     return (out.reshape(B, H, W, hd),
             jnp.sum(nsel.reshape(B, H, W), axis=1))
+
+
+def paged_mixed_attention(q, arena_k, arena_v, block_tables, starts, qlens,
+                          site: LampSite, *, tau=None,
+                          window: Optional[int] = None,
+                          block_q: Optional[int] = None,
+                          interpret: bool = True,
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mixed-row paged attention: one grid over decode rows (qlens[b] == 1),
+    chunked-prefill windows (qlens[b] == w) and speculative verify rows
+    (qlens[b] == k+1). Alias of ``paged_prefill_attention`` with `qlens`
+    required -- the fused serving step's kernel entry."""
+    return paged_prefill_attention(q, arena_k, arena_v, block_tables, starts,
+                                   site, tau=tau, qlens=qlens, window=window,
+                                   block_q=block_q, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

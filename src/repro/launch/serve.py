@@ -158,6 +158,12 @@ def main():
                          "non-speculative decoding)")
     ap.add_argument("--draft-len", type=int, default=4,
                     help="speculative draft tokens per sequence per round")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="fused serving step: one mixed "
+                         "prefill+decode+verify plan per step, executed as "
+                         "a single bucketed jitted launch (token-identical "
+                         "to the phase-segregated step)")
     ap.add_argument("--policy", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="adaptive LAMP policy loop: actuate per-layer "
@@ -218,7 +224,8 @@ def main():
         prefix_cache=args.prefix_cache,
         chunked_prefill=args.chunked_prefill,
         kernel=args.kernel, speculative=args.speculative,
-        draft_len=args.draft_len, obs=obs, policy=policy))
+        draft_len=args.draft_len, fused_step=args.fused,
+        obs=obs, policy=policy))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -227,7 +234,7 @@ def main():
           f"pool={engine.pool.num_total}x{engine.pool.block_size} blocks "
           f"prefix_cache={args.prefix_cache} "
           f"chunked_prefill={args.chunked_prefill} kernel={args.kernel} "
-          f"policy={args.policy}")
+          f"policy={args.policy} fused={args.fused}")
 
     with engine.obs.profile():
         outputs = serve_stream(engine, stream,
@@ -238,10 +245,13 @@ def main():
     s = engine.stats(exact=True)
     mean_rate = (np.mean([o.lamp_recompute_rate for o in outputs])
                  if outputs else 0.0)
+    shape = (f"{s['mixed_steps']} mixed steps, {s['launches']} launches"
+             if args.fused else
+             f"{s['prefill_steps']} prefill / {s['decode_steps']} decode "
+             f"steps")
     print(f"[serve] finished {s['num_finished']}/{args.num_requests} "
           f"in {s['elapsed_s']:.2f}s "
-          f"({s['prefill_steps']} prefill / {s['decode_steps']} decode steps, "
-          f"{s['preemptions']} preemptions)")
+          f"({shape}, {s['preemptions']} preemptions)")
     print(f"[serve] throughput {s['tokens_per_s']:.1f} tok/s, "
           f"{s['requests_per_s']:.2f} req/s")
     print(f"[serve] latency p50 {s['latency_p50_s']*1e3:.0f}ms  "

@@ -390,14 +390,11 @@ def paged_prefill_window(cfg, params, tokens: jnp.ndarray,
     overriding the static site tau -- a *traced operand*, so the serving
     policy controller can move thresholds every step without recompiling.
     """
-    B = tokens.shape[0]
-    x, arena, counts = _paged_window_apply(
-        cfg, params, tokens, arena, block_tables, starts, lengths,
-        use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel,
-        per_layer=per_layer, taus=taus)
-    x_last = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
-    logits = LY.unembed(cfg, params["embed"], x_last)
-    return logits, arena, counts
+    return paged_mixed_step(cfg, params, tokens, arena, block_tables,
+                            starts, lengths, use_lamp=use_lamp,
+                            moe_groups=moe_groups, kernel=kernel,
+                            per_layer=per_layer, taus=taus,
+                            all_logits=False)
 
 
 def paged_verify_window(cfg, params, tokens: jnp.ndarray,
@@ -425,10 +422,55 @@ def paged_verify_window(cfg, params, tokens: jnp.ndarray,
     are computed over padded queries and must be ignored. `per_layer=True`
     keeps the counts' layer axis: (L, B).
     """
+    return paged_mixed_step(cfg, params, tokens, arena, block_tables,
+                            starts, lengths, use_lamp=use_lamp,
+                            moe_groups=moe_groups, kernel=kernel,
+                            per_layer=per_layer, taus=taus,
+                            all_logits=True)
+
+
+def paged_mixed_step(cfg, params, tokens: jnp.ndarray,
+                     arena: Dict[str, Any], block_tables: jnp.ndarray,
+                     starts: jnp.ndarray, lengths: jnp.ndarray, *,
+                     use_lamp: bool = True, moe_groups: int = 1,
+                     kernel: str = "gather", per_layer: bool = False,
+                     taus=None, all_logits: bool = False):
+    """One fused serving step over a *mixed* row batch.
+
+    The unification: a decode row is a width-1 window at starts[b] ==
+    cache_len, a chunked-prefill row a width-w window at its cursor, a
+    speculative verify row a width-(k+1) window at its rollback point --
+    all the same computation `_paged_window_apply` already performs. This
+    entry therefore subsumes `paged_decode_step`, `paged_prefill_window`
+    and `paged_verify_window`: one jitted launch per engine step, whose
+    per-row (start, length) metadata rides into the Pallas kernel as
+    scalar-prefetch operands (`qlens`) so every row walks exactly its own
+    live KV blocks -- no recompile across role mixes, and the gather branch
+    is the bit-for-bit CPU/reference twin of the same signature.
+
+    tokens: (B, W) window tokens left-aligned per row, padded to the bucket
+    width W; starts: (B,) tokens already cached per row; lengths: (B,) live
+    tokens in this window (1 for decode rows, k+1 for verify rows, the
+    chunk width for prefill rows; padded rows use starts=0, lengths=1 and a
+    null block table).
+
+    `all_logits=False` returns logits (B, 1, V) at each row's last valid
+    window position (the sampling position for prefill-completing and
+    decode rows); `all_logits=True` returns (B, W, V) so a speculative
+    verifier can score every drafted position. Counts are (n_selected,
+    n_valid), each (B,) -- or (L, B) with `per_layer=True`.
+
+    MoE caveat: capacity-based (non-dropless) routing is batch-composition
+    dependent, so fused-vs-split token identity is only guaranteed for
+    dense families and dropless MoE.
+    """
+    B = tokens.shape[0]
     x, arena, counts = _paged_window_apply(
         cfg, params, tokens, arena, block_tables, starts, lengths,
         use_lamp=use_lamp, moe_groups=moe_groups, kernel=kernel,
         per_layer=per_layer, taus=taus)
+    if not all_logits:
+        x = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
     logits = LY.unembed(cfg, params["embed"], x)
     return logits, arena, counts
 
@@ -477,9 +519,13 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
         from repro.core import attention as CA
         if use_pallas:
             from repro.kernels import ops as KOPS
+            # per-row qlens = live window widths: the mixed-row convention
+            # (decode rows ride as width-1 windows, verify rows as k+1);
+            # rows walk only their own live blocks -- bit-identical at live
+            # positions to the full-bucket walk (see paged_attention.py)
             o, nsel_rows = KOPS.paged_prefill_attention(
                 qh, ck, cv, block_tables, starts, site, tau=tau_l,
-                window=cfg.window)
+                qlens=lengths, window=cfg.window)
             if site.enabled:
                 cap = n_max * bs if cfg.window is None else cfg.window
                 nval_rows = jnp.clip(positions + 1, 0, cap

@@ -17,6 +17,20 @@ the gathered arena view. Because every per-position computation is row-wise
 and the gathered key width is constant, outputs are token-identical whether
 a prompt is prefilled whole, in chunks, or on top of a shared prefix.
 
+Fused step (`EngineConfig.fused_step`): the scheduler emits one *mixed*
+StepPlan per step -- prefill windows, plain decode rows (width-1 windows at
+start = cache_len) and speculative verify rows (width kd+1 windows) side by
+side -- and the engine runs it as ONE bucketed jitted launch through
+`transformer.paged_mixed_step` (plus the sequential draft scan when any row
+drafted). Per-row (start, qlen) metadata is scalar-prefetched into the
+paged-attention grid, so every mix of roles reuses the same compiled
+(rows, max_window) bucket: the jit cache is keyed on one signature instead
+of three. Because all three legacy paths are special cases of the same
+row-wise window computation, fused outputs are token-identical to the
+split paths; `mixed_exec="split"` executes the *same* mixed plans through
+the legacy sub-steps as the differential-testing twin
+(tests/test_fused_step.py locks the equivalence down).
+
 Sampling is inside the jitted step and keyed per request as
 fold_in(PRNGKey(seed), num_generated): a request's sample stream is
 deterministic regardless of how it was batched, bucketed, or preempted.
@@ -51,11 +65,12 @@ from repro.models import transformer
 from repro.obs import ObsConfig, Observability
 
 from . import sampling
+from .fn_cache import STEP_FNS
 from .kv_pool import PagedKVPool
 from .policy import PolicyConfig, PolicyController, PolicySignals
 from .request import SamplingParams, Sequence, SequenceStatus
-from .scheduler import Scheduler
-from .speculative import SpecConfig, spec_step_fns
+from .scheduler import Scheduler, StepPlan
+from .speculative import SpecConfig, spec_step_fns, speculative_accept
 
 # families the paged-KV engine can serve (no per-request side inputs, no
 # state-space cache); launchers use this to filter the arch registry.
@@ -92,6 +107,17 @@ class EngineConfig:
     # same distribution (standard accept/residual-resample rule).
     speculative: bool = False
     draft_len: int = 4
+    # fused serving step: the scheduler emits one mixed StepPlan per step
+    # (prefill windows + decode rows + speculative verify rows together)
+    # and the engine executes it as a single bucketed jitted launch over
+    # `transformer.paged_mixed_step` (plus the sequential draft scan when
+    # any row drafted). Off by default: phase-segregated plans, the
+    # pre-fusion behavior
+    fused_step: bool = False
+    # how mixed plans execute: "fused" (one launch) or "split" (the same
+    # plan through the legacy prefill/decode/spec sub-steps) -- the
+    # differential-testing twin; only consulted when fused_step is on
+    mixed_exec: str = "fused"
     # observability: the metrics registry and per-phase histograms are
     # always on; obs.trace additionally records step-phase spans for
     # Chrome-trace export (see repro.obs.ObsConfig)
@@ -161,13 +187,13 @@ def _cache_size(fn) -> int:
         return -1
 
 
-# jitted step functions keyed on (cfg, use_lamp), shared across engine
+# jitted step functions live in the shared bounded fn_cache.STEP_FNS store
+# (one keyed LRU for the step/spec/mixed builders), shared across engine
 # instances so re-instantiation (benchmarks, tests) never recompiles. The KV
 # arenas are donated: the per-step .at[].set() updates alias the pool buffers
 # in place instead of copying the whole arena every token. Sampling routes
 # through the shared serving/sampling.py primitives (same key schedule as
 # before: fold_in(PRNGKey(seed), num_generated)).
-_JIT_CACHE: Dict[Any, Any] = {}
 
 
 def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
@@ -179,10 +205,14 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
     come back per layer ((L, B) arrays); the host side reduces them.
     `taus` is a traced (L,) float32 operand carrying the live per-layer
     LAMP thresholds -- deliberately *outside* the jit cache key, so the
-    policy controller can move thresholds every step for free."""
-    key = (cfg, use_lamp, kernel, use_topk)
-    fns = _JIT_CACHE.get(key)
-    if fns is None:
+    policy controller can move thresholds every step for free.
+
+    The prefill fn doubles as the fused mixed step for plans without draft
+    rows: a decode row is a width-1 prefill window at start = cache_len
+    (`paged_prefill_window` delegates to `paged_mixed_step`), so fused mode
+    adds zero new compiled functions on the no-draft path -- only new
+    (rows, max_window) bucket shapes of this one signature."""
+    def build():
         def _prefill(params, k, v, tokens, bt, starts, lengths, taus, seeds,
                      counts, temps, topks):
             logits, arena, (nsel, nval) = transformer.paged_prefill_window(
@@ -201,10 +231,62 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
                                        top_k=topks if use_topk else None)
             return nxt, arena["k"], arena["v"], nsel, nval
 
-        fns = (jax.jit(_prefill, donate_argnums=(1, 2)),
-               jax.jit(_decode, donate_argnums=(1, 2)))
-        _JIT_CACHE[key] = fns
-    return fns
+        return (jax.jit(_prefill, donate_argnums=(1, 2)),
+                jax.jit(_decode, donate_argnums=(1, 2)))
+
+    return STEP_FNS.get_or_build(("step", cfg, use_lamp, kernel, use_topk),
+                                 build)
+
+
+def _mixed_spec_step(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
+                     use_topk: bool = False):
+    """The fused mixed step for plans with draft rows: one jitted call runs
+    every row (prefill windows, plain decode rows, verify rows) through
+    `paged_mixed_step` with all window logits kept, samples the next token
+    at each row's last valid position (prefill / plain-decode rows), and
+    runs `speculative_accept` over the first k+1 positions (verify rows).
+    The host picks per role; unused lanes cost only the tiny sampling tail.
+
+    Draft tokens/logits arrive over the draft bucket (R rows) and scatter
+    into the mixed batch via `dec_pos` (mixed-row index per draft row; pad
+    rows point out of range and mode="drop" discards them), so the draft
+    scan keeps its own compact bucket while the verify shares the mixed
+    launch."""
+    k = spec.draft_len
+
+    def build():
+        def _mixed(params, ak, av, tokens, bt, starts, qlens, kd, dec_pos,
+                   d_toks, d_logits, taus, seeds, counts, temps, topks):
+            B = tokens.shape[0]
+            tokens = tokens.at[dec_pos, 1:k + 1].set(d_toks, mode="drop")
+            dt = jnp.zeros((B, k), d_toks.dtype)
+            dt = dt.at[dec_pos].set(d_toks, mode="drop")
+            dl = jnp.zeros((B,) + d_logits.shape[1:], d_logits.dtype)
+            dl = dl.at[dec_pos].set(d_logits, mode="drop")
+            logits, arena, (nsel, nval) = transformer.paged_mixed_step(
+                cfg, params, tokens, {"k": ak, "v": av}, bt, starts, qlens,
+                use_lamp=use_lamp, kernel=kernel, per_layer=True, taus=taus,
+                all_logits=True)
+            last = logits[jnp.arange(B), jnp.maximum(qlens, 1) - 1]
+            nxt = sampling.sample_rows(last, seeds, counts, temps,
+                                       top_k=topks if use_topk else None)
+            emit, n_acc = speculative_accept(
+                logits[:, :k + 1], dt, dl, kd, seeds, counts, temps,
+                topks if use_topk else None)
+            return nxt, emit, n_acc, arena["k"], arena["v"], nsel, nval
+
+        return jax.jit(_mixed, donate_argnums=(1, 2))
+
+    return STEP_FNS.get_or_build(
+        ("mixed", cfg, use_lamp, kernel, spec, use_topk), build)
+
+
+def reset_step_caches() -> None:
+    """Benchmark/test helper: drop the shared step-function cache AND JAX's
+    compiled-computation caches, so compile counts (obs compile events)
+    measure from a cold start instead of riding earlier runs' work."""
+    STEP_FNS.clear()
+    jax.clear_caches()
 
 
 class LampEngine:
@@ -230,6 +312,10 @@ class LampEngine:
             raise ValueError(
                 f"speculative decoding needs draft_len >= 1, got "
                 f"{econfig.draft_len}")
+        if econfig.mixed_exec not in ("fused", "split"):
+            raise ValueError(
+                f"mixed_exec must be 'fused' or 'split', got "
+                f"{econfig.mixed_exec!r}")
         self.cfg = cfg
         self.params = params
         self.econfig = econfig
@@ -257,6 +343,7 @@ class LampEngine:
             max_decode_batch=econfig.max_decode_batch,
             chunked_prefill=econfig.chunked_prefill,
             spec_draft_len=econfig.draft_len if econfig.speculative else 0,
+            mixed=econfig.fused_step,
             obs=self.obs)
         self._next_id = 0
         # _seqs holds only *live* sequences: finished ones are pruned in
@@ -281,6 +368,25 @@ class LampEngine:
         self._c_prefill_steps = steps.labels("prefill")
         self._c_decode_steps = steps.labels("decode")
         self._c_spec_rounds = steps.labels("spec")
+        self._c_mixed_steps = steps.labels("mixed")
+        # role presence per mixed step, so the legacy prefill/decode step
+        # views stay meaningful under fused plans (a mixed step with any
+        # prefill row counts as a prefill step, etc.)
+        mixed_roles = reg.counter(
+            "engine_mixed_steps_total",
+            help="mixed fused steps containing each row role",
+            labels=("role",))
+        self._c_mixed_prefill = mixed_roles.labels("prefill")
+        self._c_mixed_decode = mixed_roles.labels("decode")
+        self._c_mixed_verify = mixed_roles.labels("verify")
+        launches = reg.counter(
+            "engine_launches_total",
+            help="jitted step-function invocations (the fused step's "
+                 "reason to exist: fewer of these per engine step)",
+            labels=("fn",))
+        self._c_launches = {name: launches.labels(name) for name in
+                            ("prefill", "decode", "draft", "verify",
+                             "mixed")}
         self._c_prefill_chunks = reg.counter(
             "engine_prefill_chunks_total",
             help="partial prefill windows (prompt continued next step)")
@@ -356,16 +462,33 @@ class LampEngine:
 
     @property
     def prefill_steps(self) -> int:
-        return int(self._c_prefill_steps.value)
+        # fused mixed steps containing prefill rows count as prefill steps,
+        # so the legacy view stays meaningful under fused_step
+        return int(self._c_prefill_steps.value
+                   + self._c_mixed_prefill.value)
 
     @property
     def decode_steps(self) -> int:
-        # speculative rounds are decode steps too (one round == one step)
-        return int(self._c_decode_steps.value + self._c_spec_rounds.value)
+        # speculative rounds are decode steps too (one round == one step),
+        # as are mixed steps containing any decode/verify row
+        return int(self._c_decode_steps.value + self._c_spec_rounds.value
+                   + self._c_mixed_decode.value)
 
     @property
     def total_steps(self) -> int:
-        return self.prefill_steps + self.decode_steps
+        # raw step-kind counters: a mixed step counts ONCE even when its
+        # rows span roles (the derived views above may both claim it)
+        return int(self._c_prefill_steps.value + self._c_decode_steps.value
+                   + self._c_spec_rounds.value + self._c_mixed_steps.value)
+
+    @property
+    def mixed_steps(self) -> int:
+        return int(self._c_mixed_steps.value)
+
+    @property
+    def launches(self) -> int:
+        """Jitted step-function invocations across all step kinds."""
+        return int(sum(c.value for c in self._c_launches.values()))
 
     @property
     def prefill_chunks(self) -> int:
@@ -389,7 +512,8 @@ class LampEngine:
 
     @property
     def spec_rounds(self) -> int:
-        return int(self._c_spec_rounds.value)
+        # mixed steps that verified drafts are speculative rounds too
+        return int(self._c_spec_rounds.value + self._c_mixed_verify.value)
 
     @property
     def spec_drafted(self) -> int:
@@ -490,6 +614,19 @@ class LampEngine:
         if plan.kind == "prefill":
             self._step_prefill(plan.seqs, plan.windows)
             self._c_prefill_steps.inc()
+        elif plan.kind == "mixed":
+            if self.econfig.mixed_exec == "split":
+                self._step_mixed_split(plan)
+            else:
+                self._step_mixed(plan)
+            self._c_mixed_steps.inc()
+            roles = plan.roles or []
+            if any(r == "prefill" for r in roles):
+                self._c_mixed_prefill.inc()
+            if any(r != "prefill" for r in roles):
+                self._c_mixed_decode.inc()
+            if self.econfig.speculative and any(plan.draft_lens):
+                self._c_mixed_verify.inc()
         elif self.econfig.speculative and any(plan.draft_lens):
             self._step_spec(plan.seqs, plan.draft_lens)
             self._c_spec_rounds.inc()
@@ -553,11 +690,15 @@ class LampEngine:
         return bt, seeds, counts, temps, topks
 
     def _account_lamp(self, seqs: List[Sequence], nsel: np.ndarray,
-                      nval: np.ndarray, *, verify: bool = False
+                      nval: np.ndarray, *, verify: bool = False,
+                      verify_cols: Optional[List[int]] = None
                       ) -> None:
         """Fold one step's per-layer (L, B) LAMP counts into the per-layer
         counters, the recompute-rate time series, and each sequence's
-        per-layer breakdown."""
+        per-layer breakdown. `verify=True` credits the whole batch to the
+        verify counters (a pure spec round); `verify_cols` credits only
+        those columns (a fused mixed step whose decode rows verified while
+        its prefill rows did not)."""
         sel_l = nsel.sum(axis=1)
         val_l = nval.sum(axis=1)
         self._layer_sel += sel_l
@@ -568,6 +709,9 @@ class LampEngine:
         if verify:
             self._c_verify_sel.inc(float(sel_l.sum()))
             self._c_verify_val.inc(float(val_l.sum()))
+        elif verify_cols:
+            self._c_verify_sel.inc(float(nsel[:, verify_cols].sum()))
+            self._c_verify_val.inc(float(nval[:, verify_cols].sum()))
         if val_l.sum() > 0:
             rates = np.divide(sel_l, val_l, out=np.zeros_like(sel_l),
                               where=val_l > 0)
@@ -606,6 +750,7 @@ class LampEngine:
                 jnp.asarray(bt), jnp.asarray(starts), jnp.asarray(lengths),
                 jnp.asarray(self._taus), jnp.asarray(seeds),
                 jnp.asarray(counts), jnp.asarray(temps), jnp.asarray(topks))
+        self._c_launches["prefill"].inc()
         with self.obs.span("sync"):
             jax.block_until_ready(out)
             nxt, self.pool.k, self.pool.v, nsel, nval = out
@@ -650,6 +795,7 @@ class LampEngine:
                 jnp.asarray(lengths), jnp.asarray(tokens),
                 jnp.asarray(self._taus), jnp.asarray(seeds),
                 jnp.asarray(counts), jnp.asarray(temps), jnp.asarray(topks))
+        self._c_launches["decode"].inc()
         with self.obs.span("sync"):
             jax.block_until_ready(out)
             nxt, self.pool.k, self.pool.v, nsel, nval = out
@@ -693,11 +839,13 @@ class LampEngine:
             d_toks, d_logits, self.pool.k, self.pool.v = draft_fn(
                 self.params, self.pool.k, self.pool.v, bt, lengths, tok0,
                 kd, taus, seeds, counts, temps, topks)
+        self._c_launches["draft"].inc()
         with self.obs.span("verify", rows=len(seqs), bucket=[Rb]) as spv:
             out = verify_fn(
                 self.params, self.pool.k, self.pool.v, tok0, d_toks,
                 d_logits, bt, lengths, kd, taus, seeds, counts, temps,
                 topks)
+        self._c_launches["verify"].inc()
         with self.obs.span("sync"):
             jax.block_until_ready(out)
             emit, n_acc, self.pool.k, self.pool.v, nsel, nval = out
@@ -737,6 +885,189 @@ class LampEngine:
             seq.cache_len += appended
             self._c_spec_emitted.inc(appended)
             seq.block_ids = self.pool.rollback(seq.block_ids, seq.cache_len)
+
+    def _step_mixed(self, plan: StepPlan) -> None:
+        """Run one mixed plan as a single fused launch: prefill windows,
+        plain decode rows (width-1 windows at start = cache_len) and
+        speculative verify rows (width kd+1 windows) share one bucketed
+        (rows, max_window) batch through `transformer.paged_mixed_step`.
+        Per-row (start, qlen) metadata is scalar-prefetched into the paged
+        attention grid, so every role mix reuses the same compiled bucket.
+
+        Plans without draft rows reuse the prefill step function verbatim
+        (a mixed no-draft plan IS a prefill-window batch): one launch.
+        Plans with drafts run the sequential draft scan over the decode
+        rows' compact bucket first, then one mixed launch that verifies,
+        samples, and accepts for every role at once: two launches, versus
+        the split path's three (prefill + draft + verify)."""
+        seqs, windows = plan.seqs, list(plan.windows)
+        roles = list(plan.roles or ["decode"] * len(seqs))
+        draft_lens = list(plan.draft_lens)
+        spec_round = self.econfig.speculative and any(draft_lens)
+        dec_rows = [i for i, r in enumerate(roles) if r != "prefill"]
+        cap = (self.econfig.max_prefill_batch
+               + self.econfig.max_decode_batch)
+        Bb = _bucket(len(seqs), cap)
+        Wb = _bucket(max(windows), 0)
+        if spec_round:
+            # the accept rule reads k+1 window positions per verify row
+            Wb = max(Wb, self.spec_config.verify_width)
+        tokens = np.zeros((Bb, Wb), np.int32)
+        starts = np.zeros((Bb,), np.int32)
+        qlens = np.ones((Bb,), np.int32)   # pad rows: 1 token in null block
+        for i, seq in enumerate(seqs):
+            w = windows[i]
+            if roles[i] == "prefill":
+                cur = seq.prefill_cursor
+                tokens[i, :w] = seq.prefill_tokens()[cur:cur + w]
+                starts[i] = cur
+            else:
+                # decode/verify: the window is [last_token, drafts...] at
+                # the decode tail (drafts scatter in-jit after the scan)
+                tokens[i, 0] = seq.last_token
+                starts[i] = seq.cache_len
+            qlens[i] = w
+        bt, seeds, counts, temps, topks = self._batch_arrays(seqs, Bb)
+        taus = jnp.asarray(self._taus)
+        emit = n_acc = None
+        if not spec_round:
+            mixed_fn, _ = self._step_fns(seqs)
+            n0 = _cache_size(mixed_fn)
+            with self.obs.span("mixed", rows=len(seqs), bucket=[Bb, Wb],
+                               tokens=int(sum(windows))) as sp:
+                out = mixed_fn(
+                    self.params, self.pool.k, self.pool.v,
+                    jnp.asarray(tokens), jnp.asarray(bt),
+                    jnp.asarray(starts), jnp.asarray(qlens), taus,
+                    jnp.asarray(seeds), jnp.asarray(counts),
+                    jnp.asarray(temps), jnp.asarray(topks))
+            self._c_launches["mixed"].inc()
+            with self.obs.span("sync"):
+                jax.block_until_ready(out)
+                nxt, self.pool.k, self.pool.v, nsel, nval = out
+                nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
+                                   np.asarray(nval))
+        else:
+            dseqs = [seqs[i] for i in dec_rows]
+            Rb = _bucket(len(dseqs), self.econfig.max_decode_batch)
+            tok0 = np.zeros((Rb,), np.int32)
+            dlens = np.zeros((Rb,), np.int32)
+            kdv = np.zeros((Rb,), np.int32)
+            for j, i in enumerate(dec_rows):
+                tok0[j] = seqs[i].last_token
+                dlens[j] = seqs[i].cache_len
+                kdv[j] = draft_lens[i]
+            dbt, dseeds, dcounts, dtemps, dtopks = self._batch_arrays(
+                dseqs, Rb)
+            draft_fn, _ = self._spec_fns(dseqs)
+            n0d = _cache_size(draft_fn)
+            with self.obs.span("draft", rows=len(dseqs),
+                               bucket=[Rb]) as spd:
+                d_toks, d_logits, self.pool.k, self.pool.v = draft_fn(
+                    self.params, self.pool.k, self.pool.v,
+                    jnp.asarray(dbt), jnp.asarray(dlens),
+                    jnp.asarray(tok0), jnp.asarray(kdv), taus,
+                    jnp.asarray(dseeds), jnp.asarray(dcounts),
+                    jnp.asarray(dtemps), jnp.asarray(dtopks))
+            self._c_launches["draft"].inc()
+            if n0d >= 0 and _cache_size(draft_fn) > n0d:
+                self.obs.record_compile("draft", (Rb,), spd.elapsed,
+                                        self.total_steps)
+            # draft-row -> mixed-row scatter map; pad draft rows point out
+            # of range, which scatter mode="drop" discards
+            dec_pos = np.full((Rb,), Bb, np.int32)
+            dec_pos[:len(dec_rows)] = dec_rows
+            kd_full = np.zeros((Bb,), np.int32)
+            for i in dec_rows:
+                kd_full[i] = draft_lens[i]
+            mixed_fn = _mixed_spec_step(
+                self._serving_cfg(), self.econfig.use_lamp,
+                self.econfig.kernel, self.spec_config,
+                any(s.sampling.top_k > 0 for s in seqs))
+            n0 = _cache_size(mixed_fn)
+            with self.obs.span("mixed", rows=len(seqs), bucket=[Bb, Wb],
+                               tokens=int(sum(windows))) as sp:
+                out = mixed_fn(
+                    self.params, self.pool.k, self.pool.v,
+                    jnp.asarray(tokens), jnp.asarray(bt),
+                    jnp.asarray(starts), jnp.asarray(qlens),
+                    jnp.asarray(kd_full), jnp.asarray(dec_pos), d_toks,
+                    d_logits, taus, jnp.asarray(seeds),
+                    jnp.asarray(counts), jnp.asarray(temps),
+                    jnp.asarray(topks))
+            self._c_launches["mixed"].inc()
+            with self.obs.span("sync"):
+                jax.block_until_ready(out)
+                (nxt, emit, n_acc, self.pool.k, self.pool.v, nsel,
+                 nval) = out
+                nxt, emit, n_acc, nsel, nval = (
+                    np.asarray(nxt), np.asarray(emit), np.asarray(n_acc),
+                    np.asarray(nsel), np.asarray(nval))
+        if n0 >= 0 and _cache_size(mixed_fn) > n0:
+            self.obs.record_compile("mixed", (Bb, Wb), sp.elapsed,
+                                    self.total_steps)
+        now = self._now()
+        self._account_lamp(seqs, nsel, nval,
+                           verify_cols=dec_rows if spec_round else None)
+        for i, seq in enumerate(seqs):
+            w = windows[i]
+            if roles[i] == "prefill":
+                seq.prefill_cursor += w
+                seq.cache_len = seq.prefill_cursor
+                self._c_prefill_tokens.inc(w)
+                if self.econfig.prefix_cache:
+                    self.pool.register_prefix(seq.prefill_tokens(),
+                                              seq.block_ids, seq.cache_len,
+                                              hashes=seq.prefix_hashes)
+                if seq.prefill_remaining == 0:
+                    seq.status = SequenceStatus.DECODE
+                    seq.on_token(int(nxt[i]), now)
+                    self._c_generated.inc()
+                else:
+                    self._c_prefill_chunks.inc()
+            elif spec_round:
+                # identical bookkeeping to _step_spec (see the acceptance
+                # accounting rationale there)
+                a = int(n_acc[i])
+                seq.spec_drafted += int(draft_lens[i])
+                self._c_spec_drafted.inc(int(draft_lens[i]))
+                appended = 0
+                for t in emit[i, :a + 1]:
+                    seq.on_token(int(t), now)
+                    appended += 1
+                    self._c_generated.inc()
+                    if seq.should_stop():
+                        break
+                kept_accepted = min(a, appended)
+                seq.spec_accepted += kept_accepted
+                self._c_spec_accepted.inc(kept_accepted)
+                seq.cache_len += appended
+                self._c_spec_emitted.inc(appended)
+                seq.block_ids = self.pool.rollback(seq.block_ids,
+                                                   seq.cache_len)
+            else:
+                seq.cache_len += 1
+                seq.on_token(int(nxt[i]), now)
+                self._c_generated.inc()
+
+    def _step_mixed_split(self, plan: StepPlan) -> None:
+        """Execute a mixed plan through the legacy phase-segregated
+        sub-steps -- `_step_mixed`'s differential-testing twin: same rows,
+        same windows, same draft budgets, the same per-request tokens and
+        telemetry, but two or three launches instead of one or two."""
+        roles = list(plan.roles or ["decode"] * len(plan.seqs))
+        pre = [i for i, r in enumerate(roles) if r == "prefill"]
+        dec = [i for i, r in enumerate(roles) if r != "prefill"]
+        if pre:
+            self._step_prefill([plan.seqs[i] for i in pre],
+                               [plan.windows[i] for i in pre])
+        if dec:
+            dseqs = [plan.seqs[i] for i in dec]
+            dkd = [plan.draft_lens[i] for i in dec]
+            if self.econfig.speculative and any(dkd):
+                self._step_spec(dseqs, dkd)
+            else:
+                self._step_decode(dseqs)
 
     def _collect_finished(self, seqs: List[Sequence]) -> List[RequestOutput]:
         done = []
@@ -858,6 +1189,11 @@ class LampEngine:
             "steps": self.total_steps,
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
+            # fused-step telemetry: mixed steps count once in "steps" but
+            # feed the prefill/decode views above by row role; launches is
+            # the fused step's headline (jitted calls, fewer when fused)
+            "mixed_steps": self.mixed_steps,
+            "launches": self.launches,
             "prefill_chunks": self.prefill_chunks,
             "preemptions": self.num_preemptions,
             # prefix-cache telemetry

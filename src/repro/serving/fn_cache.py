@@ -1,0 +1,65 @@
+"""One bounded cache for every jitted serving step function.
+
+The serving stack used to hold independent module-level dicts of compiled
+step callables -- `engine._JIT_CACHE` for the (prefill, decode) pairs,
+`speculative._SPEC_JIT_CACHE` for the (draft, verify) pairs -- and the
+fused mixed step would have added a third. Each grew one entry per
+(model config, lamp flag, kernel, top-k variant, ...) forever: a process
+cycling through many configurations (test suites, multi-model benchmarks,
+policy rule-tier swaps) leaked compiled-function handles without bound.
+
+`FnCache` dedupes them into one keyed LRU store with an eviction bound.
+Callers namespace their keys with a leading tag ("step", "spec", "mixed")
+so one config's variants never collide across call sites. Eviction drops
+our handle on the callable (and its compiled-signature bookkeeping); the
+underlying XLA executables are owned by JAX's own caches, which
+`jax.clear_caches()` manages separately -- see `engine.reset_step_caches`
+for the cold-start helper benchmarks and compile-count tests use.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+
+class FnCache:
+    """Keyed LRU cache: `get_or_build(key, build)` returns the cached value
+    or builds, stores, and (beyond `maxsize` entries) evicts the least
+    recently used. Not thread-safe, like the dicts it replaces."""
+
+    def __init__(self, maxsize: int = 64):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.evictions = 0
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+
+    def get_or_build(self, key: Hashable, build: Callable[[], Any]) -> Any:
+        try:
+            fn = self._entries[key]
+        except KeyError:
+            fn = build()
+            self._entries[key] = fn
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        else:
+            self._entries.move_to_end(key)
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def keys(self):
+        return list(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+# the process-wide store every step-function builder routes through
+STEP_FNS = FnCache()

@@ -52,21 +52,26 @@ from .request import Sequence, SequenceStatus
 
 @dataclasses.dataclass
 class StepPlan:
-    kind: str                  # "prefill" | "decode"
+    kind: str                  # "prefill" | "decode" | "mixed"
     seqs: List[Sequence]
-    # prefill only: tokens of prefill_tokens() each sequence runs this step,
-    # starting at its prefill_cursor
+    # prefill / mixed: live tokens each row runs this step. For prefill rows
+    # that is the chunk window starting at prefill_cursor; for mixed decode /
+    # verify rows it is 1 + draft_lens[i] (the verify span incl. the bonus
+    # position)
     windows: Optional[List[int]] = None
-    # decode only, speculative engines: tokens each sequence may draft this
-    # round (0 = plain decode / verify-only)
+    # decode / mixed, speculative engines: tokens each sequence may draft
+    # this round (0 = plain decode / verify-only; always 0 for prefill rows)
     draft_lens: Optional[List[int]] = None
+    # mixed only: per-row role -- "prefill" (chunk window), "decode" (plain
+    # next-token row) or "verify" (speculative round with draft_lens[i] > 0)
+    roles: Optional[List[str]] = None
 
 
 class Scheduler:
     def __init__(self, pool: PagedKVPool, *, max_prefill_batch: int = 8,
                  max_prefill_tokens: int = 2048, max_decode_batch: int = 32,
                  chunked_prefill: bool = False, spec_draft_len: int = 0,
-                 obs=None):
+                 mixed: bool = False, obs=None):
         self.pool = pool
         # optional Observability (repro.obs): block-alloc spans + preemption
         # instants; None (standalone scheduler tests) degrades to no-ops
@@ -78,6 +83,11 @@ class Scheduler:
         self.max_decode_batch = max_decode_batch
         self.chunked_prefill = chunked_prefill
         self.spec_draft_len = spec_draft_len
+        # fused-step mode: every schedule() emits one "mixed" StepPlan
+        # carrying prefill windows, decode rows and speculative verify rows
+        # together (per-row roles), instead of alternating phase-segregated
+        # prefill / decode plans
+        self.mixed = mixed
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self.num_preemptions = 0
@@ -248,18 +258,21 @@ class Scheduler:
                 self.running.append(seq)
         return StepPlan("prefill", batch, windows)
 
-    def _grant_draft_budgets(self, batch: List[Sequence]) -> List[int]:
+    def _grant_draft_budgets(self, batch: List[Sequence],
+                             budget: Optional[int] = None) -> List[int]:
         """Per-sequence speculative draft budget for this round, granted
         oldest-first. A round's verify pass is a (kd + 1)-token windowed
         forward per row -- the same compute shape as a prefill chunk -- so
         speculative tokens are accounted against the prefill token budget:
         the batch's base verify positions (one per row, == plain decode)
-        are free, and sum(kd) is capped at what the budget has left. A
+        are free, and sum(kd) is capped at what the budget has left (mixed
+        plans pass the budget that their prefill windows did not spend). A
         sequence never drafts past its own token limit (the round emits at
         most kd + 1 tokens)."""
         if self.spec_draft_len <= 0:
             return [0] * len(batch)
-        budget = max(0, self.max_prefill_tokens - len(batch))
+        if budget is None:
+            budget = max(0, self.max_prefill_tokens - len(batch))
         out = []
         for seq in batch:              # batch is already oldest-first
             kd = min(self.spec_draft_len, budget,
@@ -306,7 +319,93 @@ class Scheduler:
                 raise RuntimeError(
                     "KV pool too small for a single sequence; raise n_blocks")
 
+    def _mixed_decode_part(self, pre_seqs: List[Sequence],
+                           pre_windows: List[int]):
+        """Decode/verify rows of a mixed plan. Mirrors `_try_decode` --
+        draft budgets shed before anyone is preempted -- except that draft
+        budgets come out of what the plan's prefill windows left of the
+        token budget, and preemption protects the oldest plan member
+        overall. A preemption that evicts one of this very plan's prefill
+        rows drops that row from the plan (its blocks are already freed and
+        the sequence is requeued; nothing has run yet)."""
+        while True:
+            ready = [s for s in self.running
+                     if s.status == SequenceStatus.DECODE]
+            if not ready:
+                return [], []
+            batch = sorted(ready, key=lambda s: s.arrival_time
+                           )[:self.max_decode_batch]
+            budget = max(0, self.max_prefill_tokens - sum(pre_windows)
+                         - len(batch))
+            draft_lens = self._grant_draft_budgets(batch, budget=budget)
+            while True:
+                deficits = []
+                need = 0
+                for seq, kd in zip(batch, draft_lens):
+                    want = self.pool.blocks_for(seq.cache_len + 1 + kd)
+                    deficits.append(max(0, want - len(seq.block_ids)))
+                    need += deficits[-1]
+                if need <= self.pool.num_free:
+                    if need > 0:
+                        with self._span("alloc", blocks=need):
+                            for seq, deficit in zip(batch, deficits):
+                                if deficit:
+                                    seq.block_ids.extend(
+                                        self.pool.alloc(deficit))
+                    return batch, draft_lens
+                if any(draft_lens):
+                    draft_lens = [max(0, kd - 1) for kd in draft_lens]
+                    continue
+                keep = min(pre_seqs + batch, key=lambda s: s.arrival_time)
+                if self._preempt_youngest(keep=keep):
+                    for i in range(len(pre_seqs) - 1, -1, -1):
+                        if pre_seqs[i].status == SequenceStatus.WAITING:
+                            pre_seqs.pop(i)
+                            pre_windows.pop(i)
+                    break              # recompose the decode rows
+                raise RuntimeError(
+                    "KV pool too small for a single sequence; raise n_blocks")
+
+    def _schedule_mixed(self) -> Optional[StepPlan]:
+        """One fused step: prefill windows first (chunk continuation +
+        admission, exactly `_try_prefill`), then decode/verify rows funded
+        by the leftover token budget -- all in a single mixed StepPlan.
+        Prefill-first plus FCFS admission and oldest-protected preemption
+        preserves the split scheduler's no-starvation guarantee; decode
+        rows cost one token each regardless, so they always ride along."""
+        pre = self._try_prefill()
+        pre_seqs = list(pre.seqs) if pre is not None else []
+        pre_windows = list(pre.windows) if pre is not None else []
+        dec_batch, draft_lens = self._mixed_decode_part(pre_seqs, pre_windows)
+        if not pre_seqs and not dec_batch:
+            prefill_work = bool(self.waiting) or any(
+                s.status == SequenceStatus.PREFILL for s in self.running)
+            if not (prefill_work and self.running):
+                return None
+            # every runnable sequence is mid-prefill but starved of blocks:
+            # evict youngest-first until the oldest can advance (the split
+            # path's recovery)
+            oldest = min(self.running, key=lambda s: s.arrival_time)
+            while self._preempt_youngest(keep=oldest):
+                pre = self._try_prefill()
+                if pre is not None:
+                    pre_seqs = list(pre.seqs)
+                    pre_windows = list(pre.windows)
+                    break
+            if not pre_seqs:
+                raise RuntimeError(
+                    "KV pool too small for a single sequence; raise n_blocks")
+        roles = (["prefill"] * len(pre_seqs)
+                 + ["verify" if kd else "decode" for kd in draft_lens])
+        return StepPlan(
+            "mixed", pre_seqs + dec_batch,
+            windows=pre_windows + [1 + kd for kd in draft_lens],
+            draft_lens=[0] * len(pre_seqs) + draft_lens,
+            roles=roles)
+
     def schedule(self) -> Optional[StepPlan]:
+        if self.mixed:
+            return self._schedule_mixed()
         decode_possible = any(s.status == SequenceStatus.DECODE
                               for s in self.running)
         prefill_work = bool(self.waiting) or any(

@@ -50,7 +50,7 @@ kd + 1, so no extra shapes are compiled and no garbage KV survives.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ import jax.numpy as jnp
 from repro.models import transformer
 
 from . import sampling
+from .fn_cache import STEP_FNS
 
 _DRAFT_RULES = ("none", "strict", "relaxed", "relaxed_ln")
 
@@ -168,10 +169,10 @@ def speculative_accept(verify_logits, draft_tokens, draft_logits, kd,
     return emit, n_acc
 
 
-# jitted (draft, verify) pairs keyed on (cfg, use_lamp, kernel, spec),
-# shared across engine instances like engine._JIT_CACHE. KV arenas are
-# donated so per-round updates alias the pool buffers in place.
-_SPEC_JIT_CACHE: Dict[Any, Any] = {}
+# jitted (draft, verify) pairs keyed on (cfg, use_lamp, kernel, spec) in
+# the shared bounded fn_cache.STEP_FNS store (same LRU as the engine's
+# prefill/decode and mixed builders), shared across engine instances. KV
+# arenas are donated so per-round updates alias the pool buffers in place.
 
 
 def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
@@ -204,10 +205,7 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
     False skips the per-row top-k vocab sorts for batches where no request
     filters, which is the common case.
     """
-    key = (cfg, use_lamp, kernel, spec, use_topk)
-    fns = _SPEC_JIT_CACHE.get(key)
-    if fns is not None:
-        return fns
+    key = ("spec", cfg, use_lamp, kernel, spec, use_topk)
     k = spec.draft_len
     dcfg = draft_model_config(cfg, spec) if use_lamp else cfg
 
@@ -247,7 +245,6 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
             topks if use_topk else None)
         return emit, n_acc, arena["k"], arena["v"], nsel, nval
 
-    fns = (jax.jit(_draft, donate_argnums=(1, 2)),
-           jax.jit(_verify, donate_argnums=(1, 2)))
-    _SPEC_JIT_CACHE[key] = fns
-    return fns
+    return STEP_FNS.get_or_build(
+        key, lambda: (jax.jit(_draft, donate_argnums=(1, 2)),
+                      jax.jit(_verify, donate_argnums=(1, 2))))

@@ -1,0 +1,86 @@
+"""Recorded-StepPlan trace capture and replay for differential testing.
+
+The fused-step equivalence claim is *per plan*: executing one mixed
+StepPlan through the single fused launch must produce exactly what the
+legacy phase-segregated sub-steps produce for the same plan. To assert
+that end-to-end we need both engines to see the same plan stream -- so
+the harness records the exact descriptor sequence a live engine's
+scheduler emits, then replays a twin engine under a checker that fails
+loudly the moment its scheduler deviates from the recorded trace.
+
+Scheduling is deterministic (FCFS + fixed tie-breaks off explicit arrival
+times), so a twin configured identically reproduces the trace naturally;
+the checker turns any silent divergence (which would void the token
+comparison downstream) into an immediate assertion with the step index
+and both descriptors. The schedulers keep doing their real work -- block
+allocation, prefix matching, preemption -- because a plan's correctness
+depends on that pool state; only the *observation* is instrumented.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRecord:
+    """Engine-independent descriptor of one StepPlan (request ids instead
+    of Sequence objects, so records compare across engine instances)."""
+    kind: str
+    req_ids: Tuple[int, ...]
+    windows: Optional[Tuple[int, ...]]
+    draft_lens: Optional[Tuple[int, ...]]
+    roles: Optional[Tuple[str, ...]]
+
+
+def describe(plan) -> Optional[PlanRecord]:
+    if plan is None:
+        return None
+    return PlanRecord(
+        kind=plan.kind,
+        req_ids=tuple(s.req_id for s in plan.seqs),
+        windows=tuple(plan.windows) if plan.windows is not None else None,
+        draft_lens=(tuple(plan.draft_lens)
+                    if plan.draft_lens is not None else None),
+        roles=tuple(plan.roles) if plan.roles is not None else None)
+
+
+def record_plans(engine) -> List[Optional[PlanRecord]]:
+    """Wrap `engine.scheduler.schedule` so every emitted plan appends its
+    descriptor to the returned list (None entries mark idle steps)."""
+    trace: List[Optional[PlanRecord]] = []
+    inner = engine.scheduler.schedule
+
+    def recording():
+        plan = inner()
+        trace.append(describe(plan))
+        return plan
+
+    engine.scheduler.schedule = recording
+    return trace
+
+
+def check_replay(engine, trace: List[Optional[PlanRecord]]
+                 ) -> List[Optional[PlanRecord]]:
+    """Wrap `engine.scheduler.schedule` to assert, plan by plan, that the
+    twin reproduces `trace` exactly. Returns the twin's own trace (equal
+    to the prefix of `trace` it has consumed so far)."""
+    seen: List[Optional[PlanRecord]] = []
+    inner = engine.scheduler.schedule
+
+    def checking():
+        plan = inner()
+        rec = describe(plan)
+        i = len(seen)
+        seen.append(rec)
+        assert i < len(trace), (
+            f"replay step {i}: twin scheduled {rec} past the end of the "
+            f"recorded trace ({len(trace)} plans)")
+        assert rec == trace[i], (
+            f"replay diverged at step {i}:\n  recorded: {trace[i]}\n"
+            f"  twin:     {rec}")
+        return plan
+
+    engine.scheduler.schedule = checking
+    return seen

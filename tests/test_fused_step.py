@@ -1,0 +1,439 @@
+"""Trace-replay differential harness for the fused serving step.
+
+The fused step (`EngineConfig.fused_step`) collapses chunked-prefill
+windows, plain decode rows and speculative verify rows into one mixed
+StepPlan executed as a single bucketed jitted launch. The claim that makes
+it shippable is equivalence: for the SAME plan stream, the fused launch
+must produce exactly the tokens and per-request LAMP telemetry the legacy
+phase-segregated sub-steps produce -- on both the gather reference path
+and the Pallas kernel -- while making strictly fewer kernel launches and
+compiling fewer jit signatures.
+
+The harness enforces that claim three ways:
+
+  * trace-replay differential: a live fused stream records its exact
+    StepPlan sequence (tests/plan_replay.py); a twin engine configured
+    with `mixed_exec="split"` replays under a checker that fails the
+    moment its scheduler deviates, then tokens, telemetry, launch counts
+    and compile counts are compared.
+  * a hypothesis stateful machine (plus an always-on seeded fallback
+    walk, matching the test_prefix_cache.py pattern): random arrivals,
+    chunk sizes, draft-budget actuation and pool-pressure preemptions
+    drive fused and split-exec twins in lockstep, with per-step
+    invariants -- identical plan streams, token-identical outputs,
+    bit-exact per-row LAMP counts, and no plan placing a row in a bucket
+    whose window cannot hold it.
+  * regression pins: the stats() key set, role-derived step views, the
+    "mixed" phase span, and the bounded shared fn cache.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from plan_replay import check_replay, record_plans
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import api
+from repro.serving import (EngineConfig, LampEngine, SamplingParams)
+from repro.serving import engine as engine_mod
+from repro.serving.fn_cache import STEP_FNS, FnCache
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduce_cfg(get_config("gpt2")).replace(vocab=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+_BASE = dict(block_size=4, max_model_len=64, max_prefill_batch=4,
+             max_decode_batch=16, max_prefill_tokens=24,
+             chunked_prefill=True)
+
+
+def _mk(cfg, params, *, fused=True, exec_="fused", **kw):
+    base = dict(_BASE)
+    base.update(kw)
+    return LampEngine(cfg, params, EngineConfig(
+        fused_step=fused, mixed_exec=exec_, **base))
+
+
+def _decode_heavy_stream(cfg, rng, n=10, greedy=False):
+    """>= 8 concurrent requests, short prompts, long generations: most
+    steps carry a decode/verify majority with prefill chunks riding
+    along. Mixed temperatures/top-k unless `greedy`."""
+    shared = rng.integers(0, cfg.vocab, size=9).tolist()
+    reqs = []
+    for i in range(n):
+        prompt = (shared if i % 3 == 0 else []) \
+            + rng.integers(0, cfg.vocab,
+                           size=int(rng.integers(4, 16))).tolist()
+        reqs.append((prompt, SamplingParams(
+            max_new_tokens=int(rng.integers(8, 14)), seed=i,
+            temperature=0.0 if greedy or i % 2 == 0 else 0.8,
+            top_k=0 if greedy or i % 3 else 5)))
+    return reqs
+
+
+def _feed(engine, reqs):
+    for i, (prompt, sp) in enumerate(reqs):
+        engine.add_request(list(prompt), sp, arrival_time=float(i))
+
+
+# ==================================================== trace-replay harness
+
+@pytest.mark.parametrize("kernel", ["gather", "pallas"])
+def test_trace_replay_differential(model, kernel):
+    """The acceptance harness: a decode-heavy mixed stream (>= 8
+    concurrent, chunked prefill + speculation on) is token-identical
+    fused-vs-split on this kernel, with equal per-request LAMP telemetry,
+    an identical replayed plan stream, strictly fewer launches, and (cold
+    gather arm) strictly fewer jit compiles."""
+    cfg, params = model
+    reqs = _decode_heavy_stream(cfg, np.random.default_rng(3))
+    cold = kernel == "gather"   # compile counting needs a cold cache; the
+    if cold:                    # pallas arm reuses warm fns (counts ~0)
+        engine_mod.reset_step_caches()
+
+    fused = _mk(cfg, params, kernel=kernel, speculative=True, draft_len=3)
+    trace = record_plans(fused)
+    _feed(fused, reqs)
+    f_outs = {o.req_id: o for o in fused.run_to_completion()}
+    assert len(f_outs) == len(reqs)
+    assert fused.mixed_steps == fused.total_steps > 0
+
+    if cold:
+        engine_mod.reset_step_caches()
+    twin = _mk(cfg, params, kernel=kernel, exec_="split",
+               speculative=True, draft_len=3)
+    seen = check_replay(twin, trace)
+    _feed(twin, reqs)
+    t_outs = {o.req_id: o for o in twin.run_to_completion()}
+
+    # the twin consumed the whole recorded plan stream, plan for plan
+    assert seen == trace
+    # token identity and per-request LAMP telemetry equality
+    for rid, fo in f_outs.items():
+        to = t_outs[rid]
+        assert fo.tokens == to.tokens
+        assert fo.lamp_selected == to.lamp_selected
+        assert fo.lamp_valid == to.lamp_valid
+        assert fo.lamp_layer_selected == to.lamp_layer_selected
+        assert fo.lamp_layer_valid == to.lamp_layer_valid
+        assert fo.spec_drafted == to.spec_drafted
+        assert fo.spec_accepted == to.spec_accepted
+    # strictly fewer kernel launches for the same number of steps
+    assert fused.total_steps == twin.total_steps
+    assert fused.launches < twin.launches
+    # and a smaller jit cache: fewer compiled signatures from cold
+    if cold:
+        assert 0 < fused.stats()["compiles"] < twin.stats()["compiles"]
+
+
+@pytest.mark.parametrize("speculative", [False, True])
+def test_fused_matches_classic_greedy(model, speculative):
+    """Fused vs the pre-fusion engine (fused_step off): greedy token
+    streams are schedule-invariant, so the two engines -- which compose
+    *different* plans -- must still emit identical tokens."""
+    cfg, params = model
+    reqs = _decode_heavy_stream(cfg, np.random.default_rng(5), n=8,
+                                greedy=True)
+    classic = _mk(cfg, params, fused=False, speculative=speculative,
+                  draft_len=3)
+    _feed(classic, reqs)
+    c_outs = {o.req_id: o for o in classic.run_to_completion()}
+    fused = _mk(cfg, params, speculative=speculative, draft_len=3)
+    _feed(fused, reqs)
+    f_outs = {o.req_id: o for o in fused.run_to_completion()}
+    assert {r: o.tokens for r, o in f_outs.items()} \
+        == {r: o.tokens for r, o in c_outs.items()}
+    assert classic.mixed_steps == 0 and fused.mixed_steps > 0
+
+
+# ============================================= stats / obs under mixed steps
+
+def test_stats_keys_pinned_and_role_derived_views(model):
+    """Regression pin: the exact stats() key surface (old keys intact,
+    fused additions present), prefill/decode step views derived from row
+    roles, and the mixed phase span."""
+    cfg, params = model
+    fused = _mk(cfg, params, speculative=True, draft_len=2)
+    _feed(fused, _decode_heavy_stream(cfg, np.random.default_rng(7), n=8))
+    fused.run_to_completion()
+    s = fused.stats()
+    expected = {
+        "num_finished", "elapsed_s", "tokens_per_s", "requests_per_s",
+        "latency_p50_s", "latency_p99_s", "ttft_p50_s", "steps",
+        "prefill_steps", "decode_steps", "mixed_steps", "launches",
+        "prefill_chunks", "preemptions", "blocks_allocated", "blocks_saved",
+        "cached_tokens", "resume_cached_tokens", "prefill_tokens_run",
+        "cache_hit_rate", "cow_copies", "cache_evictions", "kv_util_mean",
+        "kv_util_peak", "lamp_recompute_rate", "lamp_layer_rates",
+        "compiles", "compile_time_s", "phase", "live_requests",
+        "spec_rounds", "spec_drafted_tokens", "spec_accepted_tokens",
+        "spec_acceptance_rate", "spec_tokens_per_round",
+        "verify_recompute_rate", "policy",
+    }
+    assert set(s) == expected
+    # every step was mixed, yet the legacy views stay populated by role
+    assert s["steps"] == s["mixed_steps"] > 0
+    assert int(fused._c_prefill_steps.value) == 0
+    assert int(fused._c_decode_steps.value) == 0
+    assert s["prefill_steps"] > 0 and s["decode_steps"] > 0
+    assert s["spec_rounds"] > 0
+    assert s["verify_recompute_rate"] > 0
+    # phase histograms gain the mixed span (one per mixed step); the
+    # legacy prefill/decode spans never fire on the fused path
+    assert fused.obs.phase_hist("mixed").count == s["mixed_steps"]
+    assert fused.obs.phase_hist("prefill").count == 0
+    assert fused.obs.phase_hist("decode").count == 0
+    # mixed compile events carry the (rows, max_window) bucket key
+    for e in fused.compile_events:
+        assert e["kind"] in ("mixed", "draft")
+        if e["kind"] == "mixed":
+            assert len(e["shape"]) == 2
+    # launches: one mixed launch per no-draft step, +1 draft when drafting
+    assert s["launches"] <= 2 * s["mixed_steps"]
+
+
+def test_classic_engine_stats_unchanged(model):
+    """Backward compatibility: a default (non-fused) engine reports zero
+    mixed steps, launches == steps (+1 per spec round for the separate
+    verify), and the same derived views as before."""
+    cfg, params = model
+    eng = _mk(cfg, params, fused=False)
+    _feed(eng, _decode_heavy_stream(cfg, np.random.default_rng(9), n=4))
+    eng.run_to_completion()
+    s = eng.stats()
+    assert s["mixed_steps"] == 0
+    assert s["launches"] == s["steps"]
+    assert s["prefill_steps"] + s["decode_steps"] == s["steps"]
+    assert eng.obs.phase_hist("mixed").count == 0
+
+
+# ================================================= the shared bounded cache
+
+def test_fn_cache_bounds_and_lru():
+    c = FnCache(maxsize=2)
+    assert c.get_or_build("a", lambda: 1) == 1
+    assert c.get_or_build("a", lambda: 2) == 1     # cached, not rebuilt
+    assert c.get_or_build("b", lambda: 2) == 2
+    assert c.get_or_build("a", lambda: 3) == 1     # refresh a's recency
+    assert c.get_or_build("c", lambda: 3) == 3     # evicts b (LRU)
+    assert c.keys() == ["a", "c"] and c.evictions == 1
+    assert "b" not in c and len(c) == 2
+    assert c.get_or_build("b", lambda: 4) == 4     # rebuilt after eviction
+    with pytest.raises(ValueError):
+        FnCache(maxsize=0)
+
+
+def test_step_fns_share_one_cache(model):
+    """The three step-function families (prefill/decode, spec draft/verify,
+    fused mixed) all key into the one bounded store -- and a mixed stream
+    adds at most one entry beyond what the split paths already built."""
+    cfg, params = model
+    STEP_FNS.clear()
+    split = _mk(cfg, params, fused=False, speculative=True, draft_len=3)
+    _feed(split, _decode_heavy_stream(cfg, np.random.default_rng(11), n=6,
+                                      greedy=True))
+    split.run_to_completion()
+    split_keys = set(STEP_FNS.keys())
+    assert split_keys and all(k[0] in ("step", "spec") for k in split_keys)
+    fused = _mk(cfg, params, speculative=True, draft_len=3)
+    _feed(fused, _decode_heavy_stream(cfg, np.random.default_rng(11), n=6,
+                                      greedy=True))
+    fused.run_to_completion()
+    new = set(STEP_FNS.keys()) - split_keys
+    assert all(k[0] == "mixed" for k in new) and len(new) <= 1
+
+
+# ============================== randomized stream harness (machine + walk)
+
+class StreamHarness:
+    """Drive a fused engine and its split-exec twin in lockstep under a
+    randomized request stream, asserting per-step that the plan streams
+    are identical, outputs and per-row LAMP counts are bit-exact, and
+    every mixed plan fits its bucket."""
+
+    def __init__(self, cfg, params, speculative, kernel="gather"):
+        base = dict(block_size=4, max_model_len=48, n_blocks=30,
+                    max_prefill_batch=3, max_decode_batch=6,
+                    max_prefill_tokens=12, kernel=kernel,
+                    chunked_prefill=True, speculative=speculative,
+                    draft_len=3)
+        self.cfg = cfg
+        self.speculative = speculative
+        self.fused = LampEngine(cfg, params,
+                                EngineConfig(fused_step=True, **base))
+        self.twin = LampEngine(cfg, params, EngineConfig(
+            fused_step=True, mixed_exec="split", **base))
+        self.ftrace = record_plans(self.fused)
+        self.ttrace = record_plans(self.twin)
+        self.t = 0.0
+        self.next_req = 0
+        self.fin_f = {}
+        self.fin_t = {}
+
+    def arrive(self, plen, mnew, temp, topk, tok_seed):
+        prompt = np.random.default_rng(tok_seed).integers(
+            0, self.cfg.vocab, size=plen).tolist()
+        sp = SamplingParams(max_new_tokens=mnew, seed=self.next_req,
+                            temperature=temp, top_k=topk)
+        for eng in (self.fused, self.twin):
+            eng.add_request(list(prompt), sp, arrival_time=self.t)
+        self.next_req += 1
+        self.t += 1.0
+
+    def set_draft(self, kd):
+        # the policy controller's actuation path: a host int, no recompile
+        if self.speculative:
+            self.fused.scheduler.spec_draft_len = kd
+            self.twin.scheduler.spec_draft_len = kd
+
+    def step(self):
+        for o in self.fused.step():
+            self.fin_f[o.req_id] = o
+        for o in self.twin.step():
+            self.fin_t[o.req_id] = o
+        self.t += 1.0
+        self.check()
+
+    def check(self):
+        assert self.ftrace == self.ttrace
+        for rec in self.ftrace:
+            if rec is None or rec.kind != "mixed":
+                continue
+            # bucket invariant: the (rows, max_window) bucket the plan
+            # compiles under must hold every row it mixes in
+            Wb = engine_mod._bucket(max(rec.windows), 0)
+            n_pre = 0
+            for w, role, kd in zip(rec.windows, rec.roles, rec.draft_lens):
+                assert 1 <= w <= Wb
+                if role == "prefill":
+                    assert kd == 0
+                    n_pre += w
+                else:
+                    assert w == 1 + kd
+                    assert (role == "verify") == (kd > 0)
+            assert n_pre <= 12                     # prefill token budget
+            assert len(rec.req_ids) <= 3 + 6       # batch caps
+        for rid, fo in self.fin_f.items():
+            if rid in self.fin_t:
+                to = self.fin_t[rid]
+                assert fo.tokens == to.tokens
+                assert fo.lamp_layer_selected == to.lamp_layer_selected
+                assert fo.lamp_layer_valid == to.lamp_layer_valid
+        # live sequences: tokens and per-row LAMP counts bit-exact mid-run
+        for rid, sf in self.fused._seqs.items():
+            st_ = self.twin._seqs.get(rid)
+            if st_ is None:
+                continue
+            assert sf.generated == st_.generated
+            if sf.lamp.by_layer_selected is not None \
+                    and st_.lamp.by_layer_selected is not None:
+                assert np.array_equal(sf.lamp.by_layer_selected,
+                                      st_.lamp.by_layer_selected)
+                assert np.array_equal(sf.lamp.by_layer_valid,
+                                      st_.lamp.by_layer_valid)
+
+    def drain(self, max_steps=300):
+        n = 0
+        while (self.fused.has_unfinished()
+               or self.twin.has_unfinished()) and n < max_steps:
+            self.step()
+            n += 1
+        assert not self.fused.has_unfinished()
+        assert not self.twin.has_unfinished()
+        assert set(self.fin_f) == set(self.fin_t)
+        if self.fused.mixed_steps:
+            assert self.fused.launches <= self.twin.launches
+
+
+@pytest.mark.parametrize("speculative", [False, True])
+def test_fused_stream_seeded_walk(model, speculative):
+    """Always-on seeded fallback for the stateful machine below: a fixed
+    random walk of arrivals / draft-budget moves / steps, with the same
+    per-step invariants (runs without hypothesis installed)."""
+    cfg, params = model
+    h = StreamHarness(cfg, params, speculative)
+    rng = np.random.default_rng(17 if speculative else 23)
+    for i in range(4):
+        h.arrive(int(rng.integers(1, 20)), int(rng.integers(2, 8)),
+                 0.8 if i % 2 else 0.0, 0, i)
+    for _ in range(28):
+        r = rng.random()
+        if r < 0.2 and h.next_req < 10:
+            h.arrive(int(rng.integers(1, 20)), int(rng.integers(2, 8)),
+                     float(rng.choice([0.0, 0.8])),
+                     int(rng.choice([0, 5])), int(rng.integers(1 << 16)))
+        elif r < 0.3:
+            h.set_draft(int(rng.integers(0, 4)))
+        else:
+            h.step()
+    h.drain()
+
+
+# The hypothesis stateful machine: the deep property harness. Import-guarded
+# (not importorskip) so the seeded walk above still runs without hypothesis;
+# engine steps are expensive, so example counts are pinned explicitly rather
+# than inherited from the profile.
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    class FusedStreamMachine(RuleBasedStateMachine):
+        cfg = None      # injected by the test
+        params = None
+        speculative = True
+
+        @initialize()
+        def setup(self):
+            cls = type(self)
+            self.h = StreamHarness(cls.cfg, cls.params, cls.speculative)
+
+        @rule(plen=st.integers(1, 24), mnew=st.integers(1, 8),
+              temp=st.sampled_from([0.0, 0.8]),
+              topk=st.sampled_from([0, 5]),
+              tok_seed=st.integers(0, 1 << 16))
+        def arrive(self, plen, mnew, temp, topk, tok_seed):
+            if self.h.next_req < 12:
+                self.h.arrive(plen, mnew, temp, topk, tok_seed)
+
+        @rule(kd=st.integers(0, 3))
+        def set_draft(self, kd):
+            self.h.set_draft(kd)
+
+        @rule()
+        def step(self):
+            self.h.step()
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@pytest.mark.parametrize("speculative", [False, True])
+def test_fused_stream_state_machine(model, speculative):
+    FusedStreamMachine.cfg, FusedStreamMachine.params = model
+    FusedStreamMachine.speculative = speculative
+    hypothesis.stateful.run_state_machine_as_test(
+        FusedStreamMachine,
+        settings=hypothesis.settings(max_examples=4, deadline=None,
+                                     stateful_step_count=10))
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@pytest.mark.parametrize("speculative", [False, True])
+def test_fused_stream_state_machine_deep(model, speculative):
+    """Opt-in deep fuzz (pytest -m slow): more and longer examples."""
+    FusedStreamMachine.cfg, FusedStreamMachine.params = model
+    FusedStreamMachine.speculative = speculative
+    hypothesis.stateful.run_state_machine_as_test(
+        FusedStreamMachine,
+        settings=hypothesis.settings(max_examples=30, deadline=None,
+                                     stateful_step_count=40))

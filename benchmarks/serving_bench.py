@@ -58,6 +58,14 @@ must never perturb serving), reports the per-step overhead of tracing, and
 emits one CSV row per engine phase (schedule / alloc / prefill / decode /
 sync / emit) with its measured mean wall time from the phase histograms.
 
+The shadow-audit section (standalone via --audit-only, the CI audit-bench
+CSV artifact) replays one full-feature stream (chunked prefill +
+speculation + fused step) with the accuracy auditor on and off. It asserts
+audit-on streams token-identical to audit-off on both kernels, that the
+per-step overhead at the recommended sampling rate (0.05) stays under 5%,
+and that the fused mixed step shows the same audited error as its split
+twin -- the burn-in gate behind fused_step defaulting on.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
 """
 
@@ -74,8 +82,8 @@ from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import api
 from repro.obs import ObsConfig
 from repro.runtime.serve_loop import ServeConfig, generate
-from repro.serving import (EngineConfig, LampEngine, PolicyConfig,
-                           SamplingParams)
+from repro.serving import (AuditConfig, EngineConfig, LampEngine,
+                           PolicyConfig, SamplingParams)
 
 
 def make_requests(rng, cfg, n, min_prompt=8, max_prompt=40, min_new=4,
@@ -560,6 +568,98 @@ def bench_policy(cfg, params, rng, n_requests):
     return on
 
 
+def run_audit_stream(cfg, params, reqs, *, rate, kernel="gather",
+                     exec_="fused", salt=0):
+    """Full-feature stream (chunked prefill + speculation + fused step) with
+    the shadow auditor sampling at `rate`. Deterministic step hashing means
+    two runs with the same salt audit exactly the same steps."""
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, n_blocks=160, max_model_len=128, max_prefill_tokens=48,
+        max_decode_batch=16, use_lamp=True, kernel=kernel,
+        chunked_prefill=True, speculative=True, draft_len=4,
+        fused_step=True, mixed_exec=exec_,
+        audit=AuditConfig(rate=rate, salt=salt)))
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    t0 = time.monotonic()
+    outs = engine.run_to_completion()
+    wall = time.monotonic() - t0
+    steps = engine.total_steps
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "wall_s": wall, "steps": steps,
+            "us_per_step": wall / max(1, steps) * 1e6,
+            "audit": engine.stats()["audit"]}
+
+
+def bench_audit(cfg, params, rng, n_requests):
+    """Shadow-audit cost and invariants (standalone via --audit-only, the
+    CI audit-bench CSV artifact). Three checks on one full-feature stream
+    (chunked prefill + speculation + fused step):
+
+      1. zero token perturbation: audit at rate=1.0 must stream
+         token-identical to audit-off, on BOTH kernels (the audit launch
+         must never write back to the served KV arena);
+      2. overhead: at the recommended sampling rate (0.05) the per-step
+         cost of auditing stays under the 5%% budget (best-of-2, warmed);
+      3. fused-vs-split audited-error delta: the fused mixed step and its
+         split twin must show the same audited error (this is the burn-in
+         gate behind fused_step defaulting on)."""
+    n = max(n_requests, 8)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=24,
+                         min_new=12, max_new=20)
+    # -- 1. token identity, both kernels, every step audited ---------------
+    for kernel in ("gather", "pallas"):
+        off = run_audit_stream(cfg, params, reqs, rate=0.0, kernel=kernel)
+        on = run_audit_stream(cfg, params, reqs, rate=1.0, kernel=kernel)
+        identical = on["tokens"] == off["tokens"]
+        a = on["audit"]
+        print(f"serve_audit_{kernel},{on['wall_s']*1e6:.0f},"
+              f"outputs_identical={identical}"
+              f";audited_steps={a['audited_steps']}"
+              f";audited_rows={a['audited_rows']}"
+              f";flip_rate={a['flip_rate']:.4f}"
+              f";logit_rel_err={a['logit_rel_err']:.3e}")
+        if not identical:
+            raise SystemExit(f"audit-on outputs diverged from audit-off on "
+                             f"kernel={kernel} (the audit must not perturb "
+                             f"served tokens)")
+        if a["audited_steps"] != on["steps"]:
+            raise SystemExit("rate=1.0 audit did not cover every step")
+    # -- 2. per-step overhead at the recommended sampling rate -------------
+    for rate in (0.0, 0.05):                        # warm the jit caches
+        run_audit_stream(cfg, params, reqs, rate=rate)
+    # best-of-2 per arm: per-step walls are a few ms on CPU, so one noisy
+    # run could fake (or mask) the overhead being measured
+    off, on = [min((run_audit_stream(cfg, params, reqs, rate=r)
+                    for _ in range(2)), key=lambda x: x["us_per_step"])
+               for r in (0.0, 0.05)]
+    overhead = (on["us_per_step"] - off["us_per_step"]) / off["us_per_step"]
+    print(f"serve_audit_off,{off['us_per_step']:.0f},steps={off['steps']}")
+    print(f"serve_audit_sampled,{on['us_per_step']:.0f},"
+          f"steps={on['steps']}"
+          f";audited_steps={on['audit']['audited_steps']}")
+    print(f"serve_audit_overhead,0,overhead={overhead:+.1%}"
+          f";rate=0.05")
+    if overhead > 0.05:
+        raise SystemExit(f"audit overhead {overhead:.1%} at rate=0.05 "
+                         f"exceeds the 5% per-step budget")
+    # -- 3. fused vs split audited error (the fused default's gate) --------
+    fused = run_audit_stream(cfg, params, reqs, rate=1.0, exec_="fused")
+    split = run_audit_stream(cfg, params, reqs, rate=1.0, exec_="split")
+    fa, sa = fused["audit"], split["audit"]
+    d_rel = abs(fa["logit_rel_err"] - sa["logit_rel_err"])
+    d_flip = abs(fa["flip_rate"] - sa["flip_rate"])
+    print(f"serve_audit_fused_vs_split,0,"
+          f"rel_err_delta={d_rel:.2e};flip_delta={d_flip:.4f}"
+          f";fused_rel_err={fa['logit_rel_err']:.3e}"
+          f";split_rel_err={sa['logit_rel_err']:.3e}")
+    if d_flip > 0 or d_rel > 1e-6:
+        raise SystemExit(f"fused step changed audited error vs split twin "
+                         f"(rel delta {d_rel:.2e}, flip delta {d_flip:.4f})"
+                         f" -- the fused-default burn-in gate failed")
+    return overhead
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -576,6 +676,9 @@ def main():
     ap.add_argument("--fused-only", action="store_true",
                     help="run only the fused-step vs split-twin section "
                          "(the CI fused-step CSV artifact)")
+    ap.add_argument("--audit-only", action="store_true",
+                    help="run only the shadow-audit section (the CI "
+                         "audit-bench CSV artifact)")
     args = ap.parse_args()
 
     cfg = reduce_cfg(get_config("gpt2"))
@@ -595,6 +698,9 @@ def main():
         return
     if args.fused_only:
         bench_fused(cfg, params, rng, args.requests)
+        return
+    if args.audit_only:
+        bench_audit(cfg, params, rng, args.requests)
         return
     results = {}
     for mode in ("static", "engine"):
@@ -633,6 +739,8 @@ def main():
     bench_obs(cfg, params, rng, args.requests)
 
     bench_policy(cfg, params, rng, args.requests)
+
+    bench_audit(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

@@ -5,11 +5,12 @@ completions as they finish (not in arrival order -- short requests overtake
 long ones), and prints per-request LAMP recompute rates: the paper's
 telemetry, now observable per serving request.
 
-Pass --fused to serve the same burst through the fused single-launch
-mixed step (scheduler emits one mixed prefill+decode+verify plan per
-step; the engine runs it as one bucketed jitted call).
+The fused single-launch mixed step (scheduler emits one mixed
+prefill+decode+verify plan per step; the engine runs it as one bucketed
+jitted call) is the default; pass --no-fused to fall back to the split
+per-phase launches.
 
-    PYTHONPATH=src python examples/serve_continuous.py [arch] [--fused]
+    PYTHONPATH=src python examples/serve_continuous.py [arch] [--no-fused]
 """
 
 import sys
@@ -26,8 +27,9 @@ from repro.serving import EngineConfig, LampEngine, SamplingParams
 
 
 def main():
-    args = [a for a in sys.argv[1:] if a != "--fused"]
-    fused = "--fused" in sys.argv[1:]
+    flags = {"--fused", "--no-fused"}
+    args = [a for a in sys.argv[1:] if a not in flags]
+    fused = "--no-fused" not in sys.argv[1:]
     arch = args[0] if args else "gpt2"
     cfg = reduced(get_config(arch))
     params = api.init_params(cfg, jax.random.PRNGKey(0))

@@ -33,8 +33,8 @@ import numpy as np
 from repro.configs import get_config, list_archs, reduced as reduce_cfg
 from repro.models import api
 from repro.obs import ObsConfig
-from repro.serving import (EngineConfig, LampEngine, PolicyConfig,
-                           SamplingParams)
+from repro.serving import (AuditConfig, EngineConfig, LampEngine,
+                           PolicyConfig, SamplingParams)
 from repro.serving.engine import TEXT_FAMILIES
 
 
@@ -64,13 +64,20 @@ def build_stream(rng: np.random.Generator, args, vocab: int):
 
 
 def metrics_line(engine: LampEngine, elapsed: float) -> str:
-    """One-line live snapshot for periodic progress logging."""
+    """One-line live snapshot for periodic progress logging. Carries the
+    policy mode and the audited flip rate so a burst-load run is readable
+    from the log alone: "mode=shed" explains a rate drop, and a flip-rate
+    spike says the degradation is costing real tokens."""
     s = engine.stats()
+    mode = s["policy"]["mode"] if s["policy"]["enabled"] else "off"
+    audit = s["audit"]
+    flips = (f"{audit['flip_rate']:.3f}" if audit["enabled"] else "-")
     return (f"[serve] t={elapsed:7.2f}s live={s['live_requests']:>3d} "
             f"done={s['num_finished']:>3d} steps={s['steps']} "
             f"tok/s={s['tokens_per_s']:7.1f} "
             f"kv_util={s['kv_util_peak']:.0%} "
             f"lamp_rate={s['lamp_recompute_rate']:.4f} "
+            f"mode={mode} audit_flips={flips} "
             f"compiles={s['compiles']}")
 
 
@@ -159,11 +166,12 @@ def main():
     ap.add_argument("--draft-len", type=int, default=4,
                     help="speculative draft tokens per sequence per round")
     ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
-                    default=False,
+                    default=True,
                     help="fused serving step: one mixed "
                          "prefill+decode+verify plan per step, executed as "
                          "a single bucketed jitted launch (token-identical "
-                         "to the phase-segregated step)")
+                         "to the phase-segregated step). On by default; "
+                         "--no-fused restores the split phases")
     ap.add_argument("--policy", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="adaptive LAMP policy loop: actuate per-layer "
@@ -178,6 +186,17 @@ def main():
                     help="step-latency SLO in seconds; exceeding it is "
                          "pressure that degrades the policy mode (0 = no "
                          "latency signal)")
+    ap.add_argument("--audit-rate", type=float, default=0.0,
+                    help="shadow-audit this fraction of serving steps: "
+                         "re-run sampled rows through the FP32 reference "
+                         "forward (never perturbs served tokens) and "
+                         "report realized LAMP error -- per-layer "
+                         "attribution, argmax flip rate, top-k overlap "
+                         "(0 = off; 0.05 costs <5%% per-step overhead)")
+    ap.add_argument("--audit-out", default="",
+                    help="write the final audit summary (stats()['audit'] "
+                         "JSON: per-layer errors, flip rate, calibrated "
+                         "targets) here")
     ap.add_argument("--top-k", type=int, default=0,
                     help="sample from the top-k logits only (0 = "
                          "unfiltered); also the filter the speculative "
@@ -225,7 +244,8 @@ def main():
         chunked_prefill=args.chunked_prefill,
         kernel=args.kernel, speculative=args.speculative,
         draft_len=args.draft_len, fused_step=args.fused,
-        obs=obs, policy=policy))
+        obs=obs, policy=policy,
+        audit=AuditConfig(rate=args.audit_rate)))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -289,6 +309,30 @@ def main():
               f"{p['actuations']} actuations), tau mean {p['tau_mean']:.4f} "
               f"[{p['tau_min']:.4f}, {p['tau_max']:.4f}], "
               f"draft_len={p['draft_len']}")
+    if args.audit_rate > 0:
+        a = s["audit"]
+        if a["enabled"]:
+            print(f"[serve] audit: {a['audited_steps']} steps / "
+                  f"{a['audited_rows']} rows audited, "
+                  f"flip rate {a['flip_rate']:.4f}, "
+                  f"logit rel err {a['logit_rel_err']:.3e}, "
+                  f"{a['calibrations']} calibrations")
+            print("[serve] audit per-layer KQ err: "
+                  + " ".join(f"L{i}={e:.2e}"
+                             for i, e in enumerate(a["layer_kq_err"])))
+            if "targets" in a:
+                print("[serve] audit calibrated targets: "
+                      + " ".join(f"L{i}={t:.3f}"
+                                 for i, t in enumerate(a["targets"]))
+                      + f" (guarded: "
+                      f"{sum(1 for ok in a['relax_ok'] if not ok)})")
+        else:
+            print("[serve] audit: disabled (--no-lamp runs have no LAMP "
+                  "error to measure)")
+    if args.audit_out:
+        with open(args.audit_out, "w") as f:
+            json.dump(s["audit"], f, indent=1)
+        print(f"[serve] wrote audit summary to {args.audit_out}")
     if args.speculative:
         acc = [o.spec_acceptance_rate for o in outputs if o.spec_drafted]
         print(f"[serve] speculative: {s['spec_rounds']} rounds, "

@@ -574,6 +574,164 @@ def _paged_window_apply(cfg, params, tokens, arena, block_tables, starts,
     return x, {"k": ks, "v": vs}, (nsel, nval)
 
 
+def paged_audit_window(cfg, params, tokens, arena, block_tables, starts,
+                       lengths, row_mask, *, moe_groups: int = 1,
+                       taus=None, top_k: int = 5) -> Dict[str, jnp.ndarray]:
+    """Shadow-audit forward: the LAMP serving arm and the FP32 reference arm
+    run in lockstep over the same window batch, and only *error telemetry*
+    comes back -- never logits to sample from and never an updated arena, so
+    calling this can not perturb served tokens (the engine additionally
+    passes the arena without donation, leaving the pool buffers untouched).
+
+    Row b replays tokens at absolute positions starts[b] .. starts[b] +
+    lengths[b] - 1 against its block table, exactly like
+    `paged_mixed_step(kernel="gather")`: decode rows ride as width-1 windows,
+    speculative rows as their pre-draft width-1 decode window, prefill rows
+    as their chunk window. Three streams per layer:
+
+      * lamp:   the serving computation (LAMP attention, live `taus`),
+                carried through the stack -- its KV writes go into a
+                functional copy of the arena slice;
+      * ref:    the same computation with LAMP disabled (uniform FP32
+                attention via `attention_reference`), the high-precision
+                oracle, carried separately;
+      * shadow: LAMP attention applied to the *ref* carry's input -- its
+                divergence from the ref attention isolates layer l's *local*
+                KQ-site error, uncontaminated by error inherited from layers
+                below (the quantity the componentwise forward-error bound
+                composes; see obs/error_model.py).
+
+    `row_mask` (B,) zeroes padded bucket rows out of every reduction.
+    Returns a dict of reduced metrics (tiny host transfer):
+      kq_err / router_err / cum_err : (L,) mean per-token relative L2 error
+        (local KQ-site, local router-site, cumulative hidden-state drift);
+      logit_rel / logit_max_abs : (B,) final-position logit error;
+      flip : (B,) 1.0 where the greedy argmax token differs;
+      topk : (B,) |top-k(lamp) intersect top-k(ref)| / k.
+    Per-row entries for padded rows are garbage -- callers slice the live
+    prefix. MoE rows also audit the router site; dense families report 0.
+    """
+    B, W = tokens.shape
+    n_max = block_tables.shape[1]
+    bs = arena["k"].shape[2]
+    positions = starts[:, None] + jnp.arange(W)[None, :]              # (B, W)
+    ctx = _ctx(cfg, positions, True, "full", moe_groups)
+    site = _serving_site(ctx.lamp_kq)
+    r_site = ctx.lamp_router
+    off = LampSite(enabled=False)
+    valid_tok = jnp.arange(W)[None, :] < lengths[:, None]             # (B, W)
+    blk_idx = jnp.clip(positions // bs, 0, n_max - 1)
+    blk = jnp.where(valid_tok,
+                    jnp.take_along_axis(block_tables, blk_idx, axis=1), 0)
+    off_idx = jnp.where(valid_tok, positions % bs, 0)
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    if taus is None:
+        taus = jnp.full((cfg.n_layers,), float(site.tau), jnp.float32)
+
+    w = valid_tok.astype(jnp.float32) * row_mask.astype(jnp.float32)[:, None]
+    wsum = jnp.maximum(jnp.sum(w), 1.0)
+
+    def werr(a, b):
+        # per-token relative L2 error over the feature axis, averaged over
+        # live tokens of live rows
+        af, bf = a.astype(jnp.float32), b.astype(jnp.float32)
+        num = jnp.sqrt(jnp.sum((af - bf) ** 2, axis=-1))
+        den = jnp.sqrt(jnp.sum(bf ** 2, axis=-1)) + 1e-30
+        return jnp.sum((num / den) * w) / wsum
+
+    from repro.core import attention as CA
+
+    def gathered(ck, cv):
+        ks = ck[block_tables].reshape(B, n_max * bs, Hkv, hd)
+        vs = cv[block_tables].reshape(B, n_max * bs, Hkv, hd)
+        kh = LY._repeat_kv(jnp.moveaxis(ks, 2, 1), H // Hkv)
+        vh = LY._repeat_kv(jnp.moveaxis(vs, 2, 1), H // Hkv)
+        return kh, vh
+
+    def flat(o):
+        # (B, H, W, hd) attention layout -> (B, W, H*hd) feature rows
+        return jnp.swapaxes(o, 1, 2).reshape(B, W, -1)
+
+    def attn(qh, kh, vh, lamp_site, tau_l):
+        if lamp_site.enabled:
+            o, _ = CA.attention_lamp(qh, kh, vh, lamp_site, causal=True,
+                                     window=cfg.window, offset=starts,
+                                     reduce=False, tau=tau_l)
+        else:
+            o = CA.attention_reference(qh, kh, vh, causal=True,
+                                       window=cfg.window, offset=starts)
+        return o
+
+    def arm(xc, p_l, ck, cv, lamp_site, tau_l):
+        # one residual block of one stream; returns the new carry plus the
+        # ref-stream intermediates the shadow computation needs
+        h = LY.apply_norm(cfg, xc, p_l, "ln1")
+        q, k, v = LY._project_qkv(cfg, p_l["attn"], h, positions)
+        ck = ck.at[blk, off_idx].set(k.astype(ck.dtype))
+        cv = cv.at[blk, off_idx].set(v.astype(cv.dtype))
+        qh = jnp.swapaxes(q, 1, 2)
+        kh, vh = gathered(ck, cv)
+        o = attn(qh, kh, vh, lamp_site, tau_l)
+        xc = xc + flat(o).astype(xc.dtype) @ p_l["attn"]["wo"]
+        h2 = LY.apply_norm(cfg, xc, p_l, "ln2")
+        if cfg.family == "moe":
+            m, _ = MOE.moe_dispatch(cfg, p_l["moe"], h2,
+                                    lamp_site=(r_site if lamp_site.enabled
+                                               else off),
+                                    num_groups=ctx.moe_groups)
+        else:
+            m = LY.mlp_apply(cfg, p_l["mlp"], h2)
+        return xc + m, (qh, kh, vh, o, h2)
+
+    def body(carry, xs):
+        x_l, x_r = carry
+        p_l, ck, cv, tau_l = xs
+        x_l, _ = arm(x_l, p_l, ck, cv, site, tau_l)
+        x_r, (qh_r, kh_r, vh_r, o_r, h2_r) = arm(x_r, p_l, ck, cv, off, tau_l)
+        # local KQ-site error: LAMP applied to the reference stream's own
+        # inputs, against the reference attention on those same inputs
+        o_s = attn(qh_r, kh_r, vh_r, site, tau_l)
+        kq_err = werr(flat(o_s), flat(o_r))
+        if cfg.family == "moe" and r_site.enabled:
+            m_s, _ = MOE.moe_dispatch(cfg, p_l["moe"], h2_r, lamp_site=r_site,
+                                      num_groups=ctx.moe_groups)
+            m_r, _ = MOE.moe_dispatch(cfg, p_l["moe"], h2_r, lamp_site=off,
+                                      num_groups=ctx.moe_groups)
+            router_err = werr(m_s, m_r)
+        else:
+            router_err = jnp.float32(0.0)
+        cum_err = werr(x_l, x_r)
+        return (x_l, x_r), (kq_err, router_err, cum_err)
+
+    x0 = LY.embed(cfg, params["embed"], tokens, positions)
+    (x_l, x_r), (kq_err, router_err, cum_err) = jax.lax.scan(
+        body, (x0, x0), (params["blocks"], arena["k"], arena["v"], taus))
+
+    def final(x):
+        if cfg.norm == "layernorm":
+            x = LY.layer_norm(x, params["lnf_w"], params["lnf_b"])
+        else:
+            x = LY.rms_norm(x, params["lnf_w"])
+        x = x[jnp.arange(B), jnp.maximum(lengths, 1) - 1][:, None]
+        return LY.unembed(cfg, params["embed"], x)[:, 0].astype(jnp.float32)
+
+    lg_l, lg_r = final(x_l), final(x_r)                               # (B, V)
+    diff = lg_l - lg_r
+    logit_rel = (jnp.sqrt(jnp.sum(diff ** 2, axis=-1))
+                 / (jnp.sqrt(jnp.sum(lg_r ** 2, axis=-1)) + 1e-30))
+    logit_max_abs = jnp.max(jnp.abs(diff), axis=-1)
+    flip = (jnp.argmax(lg_l, axis=-1)
+            != jnp.argmax(lg_r, axis=-1)).astype(jnp.float32)
+    k = max(1, min(int(top_k), int(cfg.vocab)))
+    _, idx_l = jax.lax.top_k(lg_l, k)
+    _, idx_r = jax.lax.top_k(lg_r, k)
+    topk = jnp.mean((idx_l[:, :, None] == idx_r[:, None, :]
+                     ).any(-1).astype(jnp.float32), axis=-1)
+    return {"kq_err": kq_err, "router_err": router_err, "cum_err": cum_err,
+            "logit_rel": logit_rel, "logit_max_abs": logit_max_abs,
+            "flip": flip, "topk": topk}
+
+
 def paged_decode_step(cfg, params, arena: Dict[str, Any],
                       block_tables: jnp.ndarray, lengths: jnp.ndarray,
                       tokens: jnp.ndarray, *, use_lamp: bool = True,

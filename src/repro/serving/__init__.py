@@ -29,6 +29,8 @@ compile-event log); every engine carries an `Observability` bundle at
 `engine.obs`, configured by `EngineConfig.obs` (an `repro.obs.ObsConfig`).
 """
 
+from repro.obs.audit import AuditConfig
+
 from .engine import EngineConfig, LampEngine, RequestOutput
 from .kv_pool import PagedKVPool
 from .policy import (MODE_NAMES, MODE_NORMAL, MODE_RELAXED, MODE_SHED,
@@ -43,5 +45,5 @@ __all__ = [
     "SamplingParams", "Sequence", "SequenceStatus", "Scheduler", "StepPlan",
     "SpecConfig", "PolicyConfig", "PolicyController", "PolicySignals",
     "PolicyActions", "MODE_NAMES", "MODE_NORMAL", "MODE_RELAXED",
-    "MODE_SHED",
+    "MODE_SHED", "AuditConfig",
 ]

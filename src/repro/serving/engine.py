@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.obs import ObsConfig, Observability
+from repro.obs.audit import AuditConfig, ShadowAuditor
 
 from . import sampling
 from .fn_cache import STEP_FNS
@@ -111,9 +112,11 @@ class EngineConfig:
     # (prefill windows + decode rows + speculative verify rows together)
     # and the engine executes it as a single bucketed jitted launch over
     # `transformer.paged_mixed_step` (plus the sequential draft scan when
-    # any row drafted). Off by default: phase-segregated plans, the
-    # pre-fusion behavior
-    fused_step: bool = False
+    # any row drafted). On by default since the shadow-audit burn-in
+    # showed zero audited-error delta fused-vs-split (serving_bench
+    # --audit-only gates this); fused_step=False restores the
+    # phase-segregated pre-fusion plans
+    fused_step: bool = True
     # how mixed plans execute: "fused" (one launch) or "split" (the same
     # plan through the legacy prefill/decode/spec sub-steps) -- the
     # differential-testing twin; only consulted when fused_step is on
@@ -122,6 +125,13 @@ class EngineConfig:
     # always on; obs.trace additionally records step-phase spans for
     # Chrome-trace export (see repro.obs.ObsConfig)
     obs: ObsConfig = ObsConfig()
+    # shadow-audit subsystem (repro.obs.audit): on a deterministic sample
+    # of steps, re-run up to audit.max_rows rows through the LAMP-vs-FP32
+    # lockstep forward (gather path, non-donated arena) and record
+    # realized-error telemetry -- lamp_audit_* metrics, stats()["audit"],
+    # and (with the policy on) error-model-calibrated per-layer targets.
+    # rate=0 disables the subsystem entirely
+    audit: AuditConfig = AuditConfig()
     # adaptive LAMP policy loop (serving/policy.py): per-layer thresholds
     # actuated toward target recompute rates every step (traced operands,
     # never a recompile), with load-aware degradation of draft length and
@@ -152,6 +162,11 @@ class RequestOutput:
     # per-layer LAMP breakdown (length n_layers; sums to the scalars above)
     lamp_layer_selected: Optional[List[float]] = None
     lamp_layer_valid: Optional[List[float]] = None
+    # shadow-audit accumulation: steps this request was audited in, summed
+    # final-logit relative error across them, and argmax flips observed
+    audit_samples: int = 0
+    audit_err_sum: float = 0.0
+    audit_flips: int = 0
 
     @property
     def lamp_recompute_rate(self) -> float:
@@ -281,6 +296,23 @@ def _mixed_spec_step(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
         ("mixed", cfg, use_lamp, kernel, spec, use_topk), build)
 
 
+def _audit_step_fn(cfg, top_k: int):
+    """The shadow-audit launch: `paged_audit_window` jitted WITHOUT arena
+    donation -- the pool buffers must survive the call untouched (the
+    zero-token-perturbation guarantee), and only reduced error metrics come
+    back. Cached per (cfg, top_k); audited row batches ride small
+    power-of-two (rows, window) buckets of this one signature."""
+    def build():
+        def _audit(params, k, v, tokens, bt, starts, lengths, row_mask,
+                   taus):
+            return transformer.paged_audit_window(
+                cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
+                row_mask, taus=taus, top_k=top_k)
+        return jax.jit(_audit)
+
+    return STEP_FNS.get_or_build(("audit", cfg, top_k), build)
+
+
 def reset_step_caches() -> None:
     """Benchmark/test helper: drop the shared step-function cache AND JAX's
     compiled-computation caches, so compile counts (obs compile events)
@@ -386,7 +418,7 @@ class LampEngine:
             labels=("fn",))
         self._c_launches = {name: launches.labels(name) for name in
                             ("prefill", "decode", "draft", "verify",
-                             "mixed")}
+                             "mixed", "audit")}
         self._c_prefill_chunks = reg.counter(
             "engine_prefill_chunks_total",
             help="partial prefill windows (prompt continued next step)")
@@ -457,6 +489,14 @@ class LampEngine:
                 base_draft_len=(econfig.draft_len if econfig.speculative
                                 else 0),
                 obs=self.obs)
+
+        # -- shadow audit: realized-error telemetry on a deterministic
+        # sample of steps (obs/audit.py). Only meaningful with LAMP on --
+        # the audit measures LAMP-vs-reference divergence, which is
+        # identically zero without LAMP
+        self.auditor: Optional[ShadowAuditor] = None
+        if econfig.audit.rate > 0 and econfig.use_lamp:
+            self.auditor = ShadowAuditor(econfig.audit, L, self.obs)
 
     # -- legacy counter attributes: views over the metrics registry ----------
 
@@ -611,6 +651,13 @@ class LampEngine:
             plan = self.scheduler.schedule()
         if plan is None:
             return []
+        # audit rows are *captured* before the sub-step runs (it mutates
+        # cursors, tokens and -- via rollback -- block tables) and *executed*
+        # after it, against the post-step arena: the audited window rewrites
+        # its own KV inside the shadow launch, and the prefix below `starts`
+        # is identical before and after the step
+        audit_batch = (self._audit_capture(plan)
+                       if self.auditor is not None else None)
         if plan.kind == "prefill":
             self._step_prefill(plan.seqs, plan.windows)
             self._c_prefill_steps.inc()
@@ -638,6 +685,10 @@ class LampEngine:
             self._c_decode_steps.inc()
         self._util_sum += self.pool.utilization
         self._util_n += 1
+        if audit_batch is not None:
+            # before _collect_finished, so a request audited on its
+            # finishing step still folds into its cumulative histogram
+            self._run_audit(audit_batch)
         with self.obs.span("emit"):
             done = self._collect_finished(plan.seqs)
         self._last_step_wall = self._now() - t0
@@ -674,6 +725,80 @@ class LampEngine:
         self._active_rule = act.rule
         if self.econfig.speculative:
             self.scheduler.spec_draft_len = act.draft_len
+
+    # -- shadow audit -------------------------------------------------------
+
+    def _audit_capture(self, plan: StepPlan) -> Optional[Dict[str, Any]]:
+        """Select and snapshot this step's audited rows (or None).
+
+        Row selection hashes (step, request, salt) -- replayable across
+        runs of the same stream. Every input the shadow launch needs is
+        copied *now*: the sub-step advances prefill cursors, appends
+        tokens, and rolls back block tables before the audit executes.
+        Decode and speculative rows are audited as their width-1 pre-draft
+        decode window (same query the serving step's first position ran);
+        prefill rows replay their whole chunk window."""
+        step_id = self.total_steps
+        seqs = plan.seqs
+        idx = self.auditor.select(step_id, [s.req_id for s in seqs])
+        if not idx:
+            return None
+        roles = list(plan.roles or [None] * len(seqs))
+        rows: List[Any] = []
+        for i in idx:
+            seq = seqs[i]
+            if plan.kind == "prefill" or roles[i] == "prefill":
+                w = plan.windows[i]
+                cur = seq.prefill_cursor
+                toks = list(seq.prefill_tokens()[cur:cur + w])
+                start = cur
+            else:
+                toks = [seq.last_token]
+                start = seq.cache_len
+            rows.append((seq, start, toks))
+        Bb = _bucket(len(rows), 0)
+        Wb = _bucket(max(len(t) for _, _, t in rows), 0)
+        tokens = np.zeros((Bb, Wb), np.int32)
+        starts = np.zeros((Bb,), np.int32)
+        lengths = np.ones((Bb,), np.int32)   # pad rows: 1 token, null table
+        row_mask = np.zeros((Bb,), np.float32)
+        bt = np.zeros((Bb, self.blocks_per_seq), np.int32)
+        for j, (seq, start, toks) in enumerate(rows):
+            tokens[j, :len(toks)] = toks
+            starts[j] = start
+            lengths[j] = len(toks)
+            row_mask[j] = 1.0
+            bt[j, :len(seq.block_ids)] = seq.block_ids
+        return {"step": step_id, "seqs": [r[0] for r in rows],
+                "tokens": tokens, "starts": starts, "lengths": lengths,
+                "row_mask": row_mask, "bt": bt, "bucket": (Bb, Wb)}
+
+    def _run_audit(self, batch: Dict[str, Any]) -> None:
+        """Execute one captured audit batch as a single extra jitted launch
+        (non-donated arena: the pool buffers -- and therefore every served
+        token -- are untouched), then fold the returned error metrics into
+        the auditor and, when a live policy controller is attached, run the
+        error-model calibration pass."""
+        Bb, Wb = batch["bucket"]
+        fn = _audit_step_fn(self._serving_cfg(), self.econfig.audit.top_k)
+        n0 = _cache_size(fn)
+        with self.obs.span("audit", rows=len(batch["seqs"]),
+                           bucket=[Bb, Wb]) as sp:
+            out = fn(self.params, self.pool.k, self.pool.v,
+                     jnp.asarray(batch["tokens"]), jnp.asarray(batch["bt"]),
+                     jnp.asarray(batch["starts"]),
+                     jnp.asarray(batch["lengths"]),
+                     jnp.asarray(batch["row_mask"]),
+                     jnp.asarray(self._taus))
+            jax.block_until_ready(out)
+        self._c_launches["audit"].inc()
+        if n0 >= 0 and _cache_size(fn) > n0:
+            self.obs.record_compile("audit", (Bb, Wb), sp.elapsed,
+                                    self.total_steps)
+        metrics = {k: np.asarray(v) for k, v in out.items()}
+        self.auditor.account(batch["step"], batch["seqs"], metrics)
+        if self.policy is not None and not self.policy.config.frozen:
+            self.auditor.maybe_calibrate(self.policy)
 
     def _batch_arrays(self, seqs: List[Sequence], Bb: int):
         bt = np.zeros((Bb, self.blocks_per_seq), np.int32)
@@ -1092,7 +1217,12 @@ class LampEngine:
                 spec_drafted=seq.spec_drafted,
                 spec_accepted=seq.spec_accepted,
                 lamp_layer_selected=lamp_l_sel,
-                lamp_layer_valid=lamp_l_val)
+                lamp_layer_valid=lamp_l_val,
+                audit_samples=seq.audit_samples,
+                audit_err_sum=seq.audit_err_sum,
+                audit_flips=seq.audit_flips)
+            if self.auditor is not None:
+                self.auditor.finish_request(seq)
             self._finished.append(out)
             self._c_finished.inc()
             self._c_cached_prefix.inc(seq.num_cached_tokens)
@@ -1237,6 +1367,9 @@ class LampEngine:
             # adaptive policy loop (serving/policy.py)
             "policy": (self.policy.stats() if self.policy is not None
                        else {"enabled": False}),
+            # shadow audit (obs/audit.py): realized LAMP error telemetry
+            "audit": (self.auditor.stats() if self.auditor is not None
+                      else {"enabled": False}),
         }
 
     def write_trace(self, path: Optional[str] = None) -> str:
@@ -1266,6 +1399,15 @@ class LampEngine:
         else:
             lines.append("trace ring empty (enable EngineConfig.obs.trace "
                          "for span-level hang forensics)")
+        # accuracy regressions that stall acceptance (and therefore
+        # progress) show up as flip-rate spikes in the audit ring
+        if self.auditor is not None:
+            tail = self.auditor.ring_tail()
+            lines.append("audit ring tail: " + ("; ".join(tail) if tail
+                                                else "(no audited steps)"))
+        else:
+            lines.append("audit off (set EngineConfig.audit.rate for "
+                         "realized-error forensics)")
         return "\n".join(lines)
 
     def run_to_completion(self, max_steps: int = 100000) -> List[RequestOutput]:

@@ -170,6 +170,12 @@ class PolicyController:
         else:
             self._targets = np.full((n_layers,), config.target_rate,
                                     np.float64)
+        # audit-calibrated state (set_error_targets): replaces the
+        # configured targets with error-model-derived ones, and optionally
+        # carries the RELAXED guardrail mask (False = this layer's audited
+        # flip rate exceeds its error budget; never relax it)
+        self._relax_ok: Optional[np.ndarray] = None
+        self.target_updates = 0
         self.base_rule = base_rule
         self.base_draft_len = base_draft_len
         self.mode = MODE_NORMAL
@@ -195,6 +201,15 @@ class PolicyController:
             self._c_transitions = reg.counter(
                 "policy_mode_transitions_total",
                 help="degradation-ladder mode changes", labels=("to",))
+            self._c_target_updates = reg.counter(
+                "policy_target_updates_total",
+                help="error-model calibrations applied to the rate targets")
+            self._g_target = reg.gauge(
+                "lamp_target_rate", help="live recompute-rate target by "
+                "layer (audit-calibrated when the shadow audit is on)",
+                labels=("layer",))
+            for l in range(n_layers):
+                self._g_target.labels(str(l)).set(float(self._targets[l]))
             for g, t in zip(self._g_tau, self._tau_base):
                 g.set(float(t))
             self._g_mode.set(MODE_NORMAL)
@@ -209,6 +224,47 @@ class PolicyController:
         if self.config.frozen:
             return self._tau_base
         return np.exp(self._log_tau).astype(np.float32)
+
+    def set_error_targets(self, targets, relax_ok=None) -> None:
+        """Install audit-calibrated per-layer recompute-rate targets.
+
+        `targets` ((L,) float) comes from obs/error_model.py: the scalar
+        default redistributed in proportion to each layer's amplified
+        audited error. `relax_ok` ((L,) bool, optional) is the degradation
+        guardrail: layers marked False have audited argmax flip rates over
+        their error budget, so RELAXED keeps their *full* target (no
+        relaxed_target_scale) and SHED holds their tau instead of slewing
+        it toward tau_max -- load never buys throughput with tokens those
+        layers are already visibly flipping. Overrides config.target_rate /
+        config.target_rates until the next call."""
+        t = np.asarray(targets, np.float64)
+        if t.shape != (self.n_layers,):
+            raise ValueError(
+                f"targets must have shape ({self.n_layers},), got {t.shape}")
+        if np.any(t <= 0.0) or np.any(t > 1.0):
+            raise ValueError("targets must be in (0, 1]")
+        self._targets = t
+        if relax_ok is not None:
+            ok = np.asarray(relax_ok, bool)
+            if ok.shape != (self.n_layers,):
+                raise ValueError(
+                    f"relax_ok must have shape ({self.n_layers},), "
+                    f"got {ok.shape}")
+            self._relax_ok = ok
+        else:
+            self._relax_ok = None
+        self.target_updates += 1
+        if self._obs is not None:
+            self._c_target_updates.inc()
+            for l in range(self.n_layers):
+                self._g_target.labels(str(l)).set(float(t[l]))
+            if self._obs.tracer.enabled:
+                self._obs.tracer.instant(
+                    "policy_targets", cat="policy",
+                    target_mean=round(float(t.mean()), 6),
+                    target_max=round(float(t.max()), 6),
+                    guarded=int(0 if self._relax_ok is None
+                                else (~self._relax_ok).sum()))
 
     def _next_mode(self, sig: PolicySignals, d_preempt: int,
                    slo_miss: bool) -> int:
@@ -310,13 +366,24 @@ class PolicyController:
         c = self.config
         if self.mode == MODE_SHED:
             # pressure overrides tracking: push every layer toward tau_max
-            # at the full slew rate (monotone pressure response)
+            # at the full slew rate (monotone pressure response) -- except
+            # layers the audit guardrail froze out of relaxation, which
+            # hold where they are
             dlog = np.full((self.n_layers,), c.max_step)
+            if self._relax_ok is not None:
+                dlog = np.where(self._relax_ok, dlog, 0.0)
         elif self._ema is None:
             return False
         else:
-            targets = self._targets * (c.relaxed_target_scale
-                                       if self.mode == MODE_RELAXED else 1.0)
+            if self.mode == MODE_RELAXED:
+                # guardrail: scaled-down (cheaper) targets only for layers
+                # whose audited flip rate is inside budget
+                scaled = self._targets * c.relaxed_target_scale
+                targets = (scaled if self._relax_ok is None
+                           else np.where(self._relax_ok, scaled,
+                                         self._targets))
+            else:
+                targets = self._targets
             eps = 1e-9
             dlog = np.clip(c.gain * np.log((self._ema + eps)
                                            / (targets + eps)),
@@ -345,4 +412,8 @@ class PolicyController:
             "rate_ema": ([] if self._ema is None
                          else [float(x) for x in self._ema]),
             "draft_len": self._draft_for_mode(),
+            "targets": [float(x) for x in self._targets],
+            "target_updates": self.target_updates,
+            "guarded_layers": (0 if self._relax_ok is None
+                               else int((~self._relax_ok).sum())),
         }

@@ -107,6 +107,13 @@ class Sequence:
         # many of those drafts the verifier accepted (across all rounds)
         self.spec_drafted = 0
         self.spec_accepted = 0
+        # shadow-audit accumulation (obs/audit.py): audited steps this
+        # request rode in, summed final-logit relative error, and argmax
+        # flips -- folded into the per-request cumulative-error histogram
+        # and RequestOutput at finish
+        self.audit_samples = 0
+        self.audit_err_sum = 0.0
+        self.audit_flips = 0
         self.first_token_time: Optional[float] = None
         self.finish_time: Optional[float] = None
         self.finish_reason: Optional[str] = None

@@ -1,0 +1,412 @@
+"""Tests for the online shadow-audit subsystem (obs/audit.py,
+obs/error_model.py, and the engine/policy wiring).
+
+Covers: deterministic replayable sampling (splitmix64 hash, two-level
+step/row draw), the componentwise forward-error model (amplification,
+budget-conserving target derivation, flip attribution, the relax mask),
+the zero-token-perturbation guarantee (audit-on streams token-identical to
+audit-off on both kernels with chunked prefill + speculation + the fused
+step enabled), lamp_audit_* metric population, tau-monotone audited error,
+error-derived targets actually changing policy actuation (the acceptance
+criterion), the RELAXED/SHED guardrails, the engine-driven calibration
+loop, per-request accumulation, and the hang-diagnostic audit ring.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import api
+from repro.obs import Observability, ObsConfig
+from repro.obs.audit import (AuditConfig, ShadowAuditor, audit_hash,
+                             select_rows)
+from repro.obs.error_model import (amplification, attribute_flips, calibrate,
+                                   derive_target_rates, relax_mask)
+from repro.serving import (EngineConfig, LampEngine, PolicyConfig,
+                           PolicyController, PolicySignals, SamplingParams)
+from repro.serving.policy import MODE_RELAXED, MODE_SHED
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduce_cfg(get_config("gpt2")).replace(vocab=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+_BASE = dict(block_size=4, max_model_len=64, max_prefill_batch=4,
+             max_decode_batch=16, max_prefill_tokens=24,
+             chunked_prefill=True, speculative=True, draft_len=3,
+             fused_step=True)
+
+
+def _mk(cfg, params, *, rate, **kw):
+    base = dict(_BASE)
+    base.update(kw)
+    audit_kw = {k[6:]: base.pop(k) for k in list(base)
+                if k.startswith("audit_")}
+    return LampEngine(cfg, params, EngineConfig(
+        audit=AuditConfig(rate=rate, **audit_kw), **base))
+
+
+def _stream(cfg, rng, n=8, greedy=True):
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=int(rng.integers(4, 16))).tolist()
+        reqs.append((prompt, SamplingParams(
+            max_new_tokens=int(rng.integers(6, 12)), seed=i,
+            temperature=0.0 if greedy or i % 2 == 0 else 0.8)))
+    return reqs
+
+
+def _feed(engine, reqs):
+    for i, (prompt, sp) in enumerate(reqs):
+        engine.add_request(list(prompt), sp, arrival_time=float(i))
+
+
+# ------------------------------------------------------- sampling hash
+
+def test_audit_hash_deterministic_and_bounded():
+    vals = [audit_hash(s, r, salt) for s in (0, 1, 7, 10**9)
+            for r in (0, 3, 99) for salt in (0, 1)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert audit_hash(5, 2, 0) == audit_hash(5, 2, 0)
+    assert audit_hash(5, 2, 0) != audit_hash(5, 2, 1)
+    assert audit_hash(5, 2, 0) != audit_hash(2, 5, 0)
+    # roughly uniform over many steps (a loose sanity band, not statistics)
+    m = np.mean([audit_hash(s, 1, 0) for s in range(2000)])
+    assert 0.45 < m < 0.55
+
+
+def test_select_rows_rate_and_replay():
+    ids = [10, 11, 12, 13, 14, 15]
+    assert select_rows(3, ids, 0.0, 0, 4) == []
+    assert select_rows(3, [], 1.0, 0, 4) == []
+    # rate=1 audits every step; the row cap binds and indices are sorted
+    for step in range(20):
+        rows = select_rows(step, ids, 1.0, 0, 4)
+        assert len(rows) == 4
+        assert rows == sorted(rows)
+        assert rows == select_rows(step, ids, 1.0, 0, 4)   # replayable
+    # the step-level draw audits ~rate of steps
+    hits = sum(bool(select_rows(s, ids, 0.25, 0, 4)) for s in range(2000))
+    assert 0.18 < hits / 2000 < 0.32
+    # a different salt audits a different subset of steps
+    hits_b = [bool(select_rows(s, ids, 0.25, 7, 4)) for s in range(200)]
+    hits_a = [bool(select_rows(s, ids, 0.25, 0, 4)) for s in range(200)]
+    assert hits_a != hits_b
+
+
+def test_audit_config_validation():
+    with pytest.raises(ValueError):
+        AuditConfig(rate=1.5)
+    with pytest.raises(ValueError):
+        AuditConfig(ema=0.0)
+    with pytest.raises(ValueError):
+        AuditConfig(max_rows=0)
+    with pytest.raises(ValueError):
+        AuditConfig(min_rate=0.6, max_rate=0.5)
+
+
+# ------------------------------------------------------- error model
+
+def test_amplification_shape_and_top_layer():
+    e = np.array([0.1, 0.2, 0.0, 0.05])
+    a = amplification(e)
+    assert a.shape == e.shape
+    assert a[-1] == pytest.approx(1.0)         # nothing above the top layer
+    assert np.all(a >= 1.0)
+    # deeper layers are amplified by everything above them
+    assert a[0] == pytest.approx((1.2) * (1.0) * (1.05))
+    assert np.all(amplification(np.zeros(5)) == 1.0)
+
+
+def test_derive_targets_uniform_is_fixed_point():
+    # up to the O(e) amplification skew (deeper layers sit under more
+    # stack), uniform audited errors keep the scalar default
+    t = derive_target_rates(np.full(4, 1e-3), 0.05)
+    assert np.allclose(t, 0.05, rtol=1e-2)
+
+
+def test_derive_targets_orders_by_error_and_conserves_budget():
+    err = np.array([5e-3, 1e-4, 1e-4, 1e-4])
+    t = derive_target_rates(err, 0.05)
+    assert t[0] > 0.05                  # noisy layer above the scalar default
+    assert np.all(t[1:] < 0.05)         # quiet layers give budget up
+    assert t.mean() == pytest.approx(0.05, rel=0.05)   # redistributed, not
+    assert np.all(t >= 0.005) and np.all(t <= 0.5)     # inflated; clamped
+    with pytest.raises(ValueError):
+        derive_target_rates(err, 0.0)
+    with pytest.raises(ValueError):
+        derive_target_rates(err, 1.5)
+
+
+def test_derive_targets_clamps():
+    err = np.array([1.0, 1e-12, 1e-12, 1e-12, 1e-12])
+    t = derive_target_rates(err, 0.05, min_rate=0.01, max_rate=0.2)
+    assert t[0] == pytest.approx(0.2)           # ceiling
+    assert np.allclose(t[1:], 0.01)             # floor
+
+
+def test_attribute_flips_partitions_rate():
+    err = np.array([2e-3, 1e-3, 5e-4])
+    attr = attribute_flips(0.06, err)
+    assert attr.sum() == pytest.approx(0.06)
+    assert attr[0] > attr[1] > attr[2]
+    assert np.all(attribute_flips(0.5, np.zeros(3)) == 0.0)
+
+
+def test_relax_mask_freezes_over_budget_layers():
+    err = np.array([1e-2, 1e-5, 1e-5])   # layer 0 owns ~all the error mass
+    ok = relax_mask(0.10, err, flip_budget=0.02)
+    assert not ok[0]
+    assert ok[1] and ok[2]
+    assert np.all(relax_mask(0.0, err, flip_budget=0.02))
+
+
+def test_calibrate_returns_both_halves():
+    t, ok = calibrate(np.array([1e-2, 1e-5]), 0.10, 0.05, flip_budget=0.02)
+    assert t.shape == ok.shape == (2,)
+    assert t[0] > t[1]
+    assert not ok[0] and ok[1]
+
+
+# ------------------------------------------------------- policy integration
+
+def _ctrl(n_layers=2, **kw):
+    cfgkw = dict(enabled=True, target_rate=0.05, interval=1, deadband=0.0,
+                 ema=1.0)
+    cfgkw.update(kw)
+    return PolicyController(PolicyConfig(**cfgkw), n_layers, 0.05,
+                            base_rule="relaxed", base_draft_len=4)
+
+
+def _sig(rates, util=0.1, preempt=0, accept=1.0):
+    return PolicySignals(layer_rates=np.asarray(rates, np.float64),
+                         utilization=util, preemptions=preempt,
+                         step_latency_s=0.001, spec_acceptance=accept)
+
+
+def test_set_error_targets_validation_and_stats():
+    c = _ctrl()
+    with pytest.raises(ValueError):
+        c.set_error_targets([0.1, 0.2, 0.3])        # wrong length
+    with pytest.raises(ValueError):
+        c.set_error_targets([0.0, 0.1])             # out of (0, 1]
+    c.set_error_targets([0.08, 0.02], [True, False])
+    s = c.stats()
+    assert s["targets"] == [0.08, 0.02]
+    assert s["target_updates"] == 1
+    assert s["guarded_layers"] == 1
+
+
+def test_error_targets_change_actuation():
+    """The acceptance criterion: error-derived targets split tau where the
+    scalar default would move every layer identically. Both layers run the
+    same recompute rate; the audited-noisy layer's higher target pulls its
+    tau DOWN (recompute more) while the quiet layer's tau rises."""
+    scalar = _ctrl()
+    scalar.update(_sig([0.05, 0.05]))               # at target: no movement
+    tau_scalar = scalar.taus.copy()
+    assert tau_scalar[0] == pytest.approx(tau_scalar[1])
+
+    derived = _ctrl()
+    t = derive_target_rates(np.array([5e-3, 1e-4]), 0.05)
+    derived.set_error_targets(t)
+    derived.update(_sig([0.05, 0.05]))
+    tau_err = derived.taus
+    assert t[0] > 0.05 > t[1]
+    assert tau_err[0] < tau_scalar[0]   # high-error layer recomputes more
+    assert tau_err[1] > tau_scalar[1]   # quiet layer gives its budget up
+
+
+def test_relaxed_guardrail_holds_flipping_layer():
+    """RELAXED scales targets down -- except for a layer whose audited flip
+    attribution is over budget: its tau must not rise above the in-budget
+    twin's."""
+    c = _ctrl(util_high=0.5, util_low=0.3)
+    c.set_error_targets([0.05, 0.05], relax_ok=[False, True])
+    c.update(_sig([0.05, 0.05], util=0.6))          # -> RELAXED
+    assert c.mode == MODE_RELAXED
+    tau = c.taus
+    # layer 1 relaxed toward the scaled-down target (tau up); layer 0 held
+    # at its full target (rate == target -> no movement)
+    assert tau[1] > tau[0]
+    assert tau[0] == pytest.approx(0.05, rel=1e-5)
+
+
+def test_shed_guardrail_holds_flipping_layer():
+    c = _ctrl(util_high=0.5, util_low=0.3, shed_util=0.7)
+    c.set_error_targets([0.05, 0.05], relax_ok=[False, True])
+    tau0 = c.taus.copy()
+    c.update(_sig([0.05, 0.05], util=0.9))          # -> SHED
+    assert c.mode == MODE_SHED
+    tau = c.taus
+    assert tau[1] > tau0[1]                         # slews toward tau_max
+    assert tau[0] == pytest.approx(tau0[0])         # guarded layer holds
+
+
+# ------------------------------------------------------- engine integration
+
+@pytest.mark.parametrize("kernel", ["gather", "pallas"])
+def test_audit_token_identity(model, kernel):
+    """The zero-perturbation acceptance gate: every step audited, full
+    feature set on (chunked prefill + speculation + fused step), both
+    kernels -- the served token streams must be identical to audit-off."""
+    cfg, params = model
+    reqs = _stream(cfg, np.random.default_rng(11), greedy=False)
+    off = _mk(cfg, params, rate=0.0, kernel=kernel)
+    _feed(off, reqs)
+    off_outs = {o.req_id: o.tokens for o in off.run_to_completion()}
+    on = _mk(cfg, params, rate=1.0, kernel=kernel)
+    _feed(on, reqs)
+    on_outs = {o.req_id: o.tokens for o in on.run_to_completion()}
+    assert on_outs == off_outs
+    a = on.stats()["audit"]
+    assert a["audited_steps"] == on.total_steps > 0
+    assert a["audited_rows"] > 0
+
+
+def test_audit_metrics_and_per_request_accumulation(model):
+    cfg, params = model
+    reqs = _stream(cfg, np.random.default_rng(5))
+    eng = _mk(cfg, params, rate=1.0)
+    _feed(eng, reqs)
+    outs = eng.run_to_completion()
+    reg = eng.obs.registry
+    steps = reg.get("lamp_audit_steps_total").value
+    assert steps == eng.total_steps > 0
+    assert reg.get("lamp_audit_rows_total").value > 0
+    fam = reg.get("lamp_audit_layer_err_total")
+    for l in range(cfg.n_layers):
+        for site in ("kq", "cum"):
+            assert fam.labels(str(l), site).value >= 0.0
+    assert fam.labels("0", "kq").value > 0.0
+    # per-row histograms saw every audited row
+    rows = reg.get("lamp_audit_rows_total").value
+    assert reg.get("lamp_audit_logit_rel_err").count == rows
+    assert reg.get("lamp_audit_topk_overlap").count == rows
+    # per-request accumulation reached the outputs and the finish histogram
+    assert all(o.audit_samples > 0 for o in outs)
+    assert all(o.audit_err_sum >= 0.0 for o in outs)
+    assert reg.get("lamp_audit_request_cum_err").count == len(outs)
+    a = eng.stats()["audit"]
+    assert a["enabled"] and a["logit_rel_err"] > 0.0
+    assert len(a["layer_kq_err"]) == cfg.n_layers
+    # the launch rode the "audit" span/launch accounting
+    assert eng.obs.registry.get("engine_launches_total") \
+        .labels("audit").value == eng.total_steps
+
+
+def test_audit_sampled_rate_bounds_and_ring(model):
+    cfg, params = model
+    reqs = _stream(cfg, np.random.default_rng(9))
+    eng = _mk(cfg, params, rate=0.5, audit_max_rows=2, audit_salt=3)
+    _feed(eng, reqs)
+    eng.run_to_completion()
+    a = eng.stats()["audit"]
+    assert 0 < a["audited_steps"] < eng.total_steps
+    assert a["audited_rows"] <= 2 * a["audited_steps"]
+    tail = eng.auditor.ring_tail()
+    assert 0 < len(tail) <= 8
+    assert all("flip_rate=" in line for line in tail)
+
+
+def test_audit_error_monotone_in_tau(model):
+    """Sanity on what the audit measures: recomputing nearly everything
+    (tiny tau) must audit (much) less error than recomputing nearly
+    nothing (large tau)."""
+    cfg, params = model
+    reqs = _stream(cfg, np.random.default_rng(2), n=4)
+
+    def run(tau):
+        c = cfg.replace(lamp=cfg.lamp.replace(
+            kq=cfg.lamp.kq.replace(tau=tau)))
+        eng = _mk(c, params, rate=1.0)
+        _feed(eng, reqs)
+        eng.run_to_completion()
+        return eng.stats()["audit"]["logit_rel_err"]
+
+    assert run(1e-4) < run(0.5)
+
+
+def test_audit_disabled_without_lamp(model):
+    cfg, params = model
+    eng = _mk(cfg, params, rate=1.0, use_lamp=False)
+    assert eng.auditor is None
+    assert eng.stats()["audit"] == {"enabled": False}
+
+
+def test_hang_diagnostic_includes_audit_ring(model):
+    cfg, params = model
+    reqs = _stream(cfg, np.random.default_rng(4), n=2)
+    eng = _mk(cfg, params, rate=1.0)
+    _feed(eng, reqs)
+    eng.step()
+    msg = eng._hang_diagnostic()
+    assert "audit ring tail:" in msg
+    assert "step=0" in msg
+    off = _mk(cfg, params, rate=0.0)
+    assert "audit off" in off._hang_diagnostic()
+
+
+def test_engine_calibration_feeds_policy(model):
+    """The full loop: audited per-layer error -> error-model targets ->
+    PolicyController. The audited-noisiest layer must end up with the
+    highest recompute-rate target."""
+    cfg, params = model
+    reqs = _stream(cfg, np.random.default_rng(8))
+    eng = _mk(cfg, params, rate=1.0, audit_calibrate_every=2,
+              audit_min_samples=2,
+              policy=PolicyConfig(enabled=True, target_rate=0.05))
+    _feed(eng, reqs)
+    eng.run_to_completion()
+    a = eng.stats()["audit"]
+    assert a["calibrations"] > 0
+    assert eng.policy.target_updates == a["calibrations"]
+    targets = np.asarray(a["targets"])
+    err = np.asarray(a["layer_kq_err"]) + np.asarray(a["layer_router_err"])
+    assert targets[int(np.argmax(err))] == targets.max()
+    assert targets.mean() == pytest.approx(0.05, rel=0.1)
+    assert eng.obs.registry.get("policy_target_updates_total").value \
+        == a["calibrations"]
+    # frozen controllers are the token-identity arm: never calibrated into
+    froz = _mk(cfg, params, rate=1.0,
+               policy=PolicyConfig(enabled=True, frozen=True))
+    _feed(froz, reqs)
+    froz.run_to_completion()
+    assert froz.policy.target_updates == 0
+
+
+def test_auditor_account_unit():
+    """ShadowAuditor bookkeeping without an engine: EMA seeding, ring
+    entries, counter increments, finish_request histogram."""
+    obs = Observability(ObsConfig())
+    aud = ShadowAuditor(AuditConfig(rate=1.0, ema=0.5), 2, obs)
+
+    class Seq:
+        audit_samples = 0
+        audit_err_sum = 0.0
+        audit_flips = 0
+
+    s = Seq()
+    m = {"kq_err": np.array([1e-3, 2e-3]),
+         "router_err": np.zeros(2), "cum_err": np.array([1e-3, 3e-3]),
+         "logit_rel": np.array([1e-2]), "logit_max_abs": np.array([0.1]),
+         "flip": np.array([1.0]), "topk": np.array([0.8])}
+    aud.account(0, [s], m)
+    assert aud.audited_steps == 1 and aud.audited_rows == 1
+    assert aud.flip_rate == 1.0                     # first sample seeds EMA
+    assert np.allclose(aud.kq_err, [1e-3, 2e-3])
+    m2 = dict(m, flip=np.array([0.0]))
+    aud.account(1, [s], m2)
+    assert aud.flip_rate == pytest.approx(0.5)      # blended at ema=0.5
+    assert s.audit_samples == 2 and s.audit_flips == 1
+    assert len(aud.ring) == 2
+    assert aud.ring[-1]["worst_layer"] == 1
+    aud.finish_request(s)
+    assert obs.registry.get("lamp_audit_request_cum_err").count == 1
+    assert obs.registry.get("lamp_audit_flips_total").value == 1.0

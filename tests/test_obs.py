@@ -132,6 +132,96 @@ def test_prometheus_exposition():
     assert 'lat_seconds_count{phase="decode"} 2' in text
 
 
+def _scrape_histogram(text, name):
+    """Parse one histogram family back out of the exposition text:
+    {labelset: {"buckets": [(le, cum), ...in emission order],
+                "sum": float, "count": float}} where labelset is the
+    sorted non-le label pairs (() for the unlabeled child)."""
+    out = {}
+    for line in text.splitlines():
+        if line.startswith("#") or not line.startswith(name):
+            continue
+        metric, val = line.rsplit(" ", 1)
+        series, _, rest = metric.partition("{")
+        labels = dict(p.split("=", 1) for p in rest[:-1].split(",") if p)
+        labels = {k: v.strip('"') for k, v in labels.items()}
+        le = labels.pop("le", None)
+        child = out.setdefault(tuple(sorted(labels.items())),
+                               {"buckets": [], "sum": None, "count": None})
+        if series == f"{name}_bucket":
+            child["buckets"].append((le, float(val)))
+        elif series == f"{name}_sum":
+            child["sum"] = float(val)
+        elif series == f"{name}_count":
+            child["count"] = float(val)
+    return out
+
+
+def _check_histogram_child(child, edges):
+    les = [le for le, _ in child["buckets"]]
+    cums = [c for _, c in child["buckets"]]
+    # one series per configured finite edge, then the explicit +Inf bucket
+    assert les == [f"{e:g}" for e in edges] + ["+Inf"]
+    # cumulative counts are monotone non-decreasing toward +Inf
+    assert all(a <= b for a, b in zip(cums, cums[1:]))
+    # +Inf carries every observation, and _count agrees with it
+    assert cums[-1] == child["count"]
+    return cums
+
+
+def test_prometheus_histogram_roundtrip_unlabeled():
+    """Scrape-parse the unlabeled `_bucket` emission branch: per-edge
+    cumulative monotonicity, the explicit +Inf bucket, and _sum/_count
+    consistency with the raw observations."""
+    reg = MetricsRegistry()
+    edges = (0.01, 0.1, 1.0, 10.0)
+    h = reg.histogram("step_seconds", edges=edges, help="step wall")
+    obs_vals = [0.005, 0.05, 0.05, 0.5, 5.0, 50.0]   # one past the top edge
+    for v in obs_vals:
+        h.observe(v)
+    parsed = _scrape_histogram(reg.to_prometheus(), "step_seconds")
+    assert set(parsed) == {()}
+    child = parsed[()]
+    cums = _check_histogram_child(child, edges)
+    assert cums == [1, 3, 4, 5, 6]     # 50.0 lands only in +Inf
+    assert child["count"] == len(obs_vals)
+    assert child["sum"] == pytest.approx(sum(obs_vals))
+
+
+def test_prometheus_histogram_roundtrip_labeled():
+    """The labeled `_bucket` branch: every child keeps its own monotone
+    cumulative series, `le` composes after the child's own labels, and
+    _sum/_count are per-child."""
+    reg = MetricsRegistry()
+    edges = (0.1, 1.0)
+    fam = reg.histogram("lat_seconds", edges=edges, labels=("phase",))
+    fam.labels("decode").observe(0.05)
+    fam.labels("decode").observe(0.5)
+    fam.labels("decode").observe(5.0)
+    fam.labels("prefill").observe(0.5)
+    text = reg.to_prometheus()
+    # the raw series names place le after the child's own label
+    assert 'lat_seconds_bucket{phase="decode",le="+Inf"} 3' in text
+    parsed = _scrape_histogram(text, "lat_seconds")
+    assert set(parsed) == {(("phase", "decode"),), (("phase", "prefill"),)}
+    dec = parsed[(("phase", "decode"),)]
+    pre = parsed[(("phase", "prefill"),)]
+    assert _check_histogram_child(dec, edges) == [1, 2, 3]
+    assert _check_histogram_child(pre, edges) == [0, 1, 1]
+    assert dec["sum"] == pytest.approx(5.55)
+    assert pre["sum"] == pytest.approx(0.5)
+    # both emission branches render the same structure for the same
+    # observations: an unlabeled twin fed decode's samples parses equal
+    reg2 = MetricsRegistry()
+    twin = reg2.histogram("lat_seconds", edges=edges)
+    for v in (0.05, 0.5, 5.0):
+        twin.observe(v)
+    t2 = _scrape_histogram(reg2.to_prometheus(), "lat_seconds")[()]
+    assert t2["buckets"] == dec["buckets"]
+    assert t2["count"] == dec["count"]
+    assert t2["sum"] == pytest.approx(dec["sum"])
+
+
 # -------------------------------------------------------------------- tracer
 
 def test_tracer_fake_clock_spans():
@@ -322,13 +412,23 @@ def test_engine_compile_events_and_phase_histograms(model):
     # record zero compiles here; every recorded event carries shape + wall
     # time and the stats() count matches the log
     for e in eng.compile_events:
-        assert e["kind"] in ("prefill", "decode", "draft", "verify")
+        assert e["kind"] in ("prefill", "decode", "draft", "verify",
+                             "mixed", "audit")
         assert isinstance(e["shape"], tuple) and e["wall_s"] >= 0.0
     assert eng.stats()["compiles"] == len(eng.compile_events)
     for must in ("schedule", "emit", "sync"):
         assert eng.obs.phase_hist(must).count > 0
-    assert eng.obs.phase_hist("prefill").count == eng.prefill_steps
-    assert eng.obs.phase_hist("decode").count == eng.decode_steps
+    # fused default: every step is one mixed launch; the split engine still
+    # feeds the per-phase histograms
+    assert eng.obs.phase_hist("mixed").count == eng.mixed_steps \
+        == eng.total_steps
+    split = LampEngine(cfg, params, EngineConfig(
+        block_size=4, n_blocks=64, max_model_len=64, fused_step=False,
+        obs=ObsConfig(trace=True)))
+    split.add_request(list(range(8)), SamplingParams(max_new_tokens=3))
+    split.run_to_completion()
+    assert split.obs.phase_hist("prefill").count == split.prefill_steps > 0
+    assert split.obs.phase_hist("decode").count == split.decode_steps > 0
 
 
 def test_engine_fake_clock_latencies(model):

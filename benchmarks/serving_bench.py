@@ -66,6 +66,14 @@ per-step overhead at the recommended sampling rate (0.05) stays under 5%,
 and that the fused mixed step shows the same audited error as its split
 twin -- the burn-in gate behind fused_step defaulting on.
 
+The fault-tolerance section (standalone via --faults-only, the CI chaos
+CSV artifact) gates the numerical health guard at < 5%% per-step overhead
+when no faults fire (token-identical to guard-off), then replays a
+fixed-seed injected-fault stream (NaN poisoning + allocation failures +
+a stall) and asserts zero engine crashes, every request individually
+finished (recovered ones token-identical to the fault-free run), and
+bit-for-bit replay of the whole chaos run.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--requests 16]
 """
 
@@ -82,8 +90,8 @@ from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import api
 from repro.obs import ObsConfig
 from repro.runtime.serve_loop import ServeConfig, generate
-from repro.serving import (AuditConfig, EngineConfig, LampEngine,
-                           PolicyConfig, SamplingParams)
+from repro.serving import (AuditConfig, EngineConfig, FaultConfig,
+                           LampEngine, PolicyConfig, SamplingParams)
 
 
 def make_requests(rng, cfg, n, min_prompt=8, max_prompt=40, min_new=4,
@@ -660,6 +668,106 @@ def bench_audit(cfg, params, rng, n_requests):
     return overhead
 
 
+def run_faults_stream(cfg, params, reqs, *, faults=None, guard=True,
+                      stall_patience=16):
+    """Full-feature stream (chunked prefill + speculation + fused step)
+    with optional deterministic fault injection and the numerical health
+    guard on/off. Same salt + rates + stream replays identical faults."""
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=8, n_blocks=160, max_model_len=128, max_prefill_tokens=48,
+        max_decode_batch=16, use_lamp=True, chunked_prefill=True,
+        speculative=True, draft_len=4, fused_step=True,
+        health_guard=guard, stall_patience=stall_patience,
+        faults=faults if faults is not None else FaultConfig()))
+    for i, (prompt, new) in enumerate(reqs):
+        engine.add_request(prompt, SamplingParams(max_new_tokens=new, seed=i))
+    t0 = time.monotonic()
+    outs = engine.run_to_completion()
+    wall = time.monotonic() - t0
+    steps = engine.total_steps
+    s = engine.stats()
+    return {"tokens": {o.req_id: o.tokens for o in outs},
+            "outs": {o.req_id: o for o in outs},
+            "wall_s": wall, "steps": steps,
+            "us_per_step": wall / max(1, steps) * 1e6,
+            "faults": s["faults"], "recoveries": s["recoveries"],
+            "failed": s["failed_requests"]}
+
+
+def bench_faults(cfg, params, rng, n_requests):
+    """Fault tolerance (standalone via --faults-only, the CI chaos CSV
+    artifact). Two gates on one full-feature stream:
+
+      1. health-guard overhead: with no faults firing, the per-row
+         non-finite checks (an in-jit reduce plus a host float compare)
+         must stream token-identical to guard-off and cost < 5%% per step
+         (best-of-2, warmed);
+      2. chaos: a fixed-seed injected-fault stream (NaN poisoning +
+         allocation failures + a stall) must complete with ZERO engine
+         crashes, every request individually finished (recovered requests
+         token-identical to the fault-free run -- recovery replays the
+         same keyed sampling stream -- and failed ones carrying a
+         diagnostic error), and must replay bit-for-bit."""
+    n = max(n_requests, 8)
+    reqs = make_requests(rng, cfg, n, min_prompt=6, max_prompt=24,
+                         min_new=12, max_new=20)
+    # -- 1. health-guard overhead, no faults -------------------------------
+    for guard in (False, True):                     # warm the jit caches
+        run_faults_stream(cfg, params, reqs, guard=guard)
+    off, on = [min((run_faults_stream(cfg, params, reqs, guard=g)
+                    for _ in range(2)), key=lambda x: x["us_per_step"])
+               for g in (False, True)]
+    identical = on["tokens"] == off["tokens"]
+    overhead = (on["us_per_step"] - off["us_per_step"]) / off["us_per_step"]
+    print(f"serve_guard_off,{off['us_per_step']:.0f},steps={off['steps']}")
+    print(f"serve_guard_on,{on['us_per_step']:.0f},steps={on['steps']}")
+    print(f"serve_guard_overhead,0,overhead={overhead:+.1%}"
+          f";outputs_identical={identical}")
+    if not identical:
+        raise SystemExit("health-guard-on outputs diverged from guard-off "
+                         "with no faults firing")
+    if overhead > 0.05:
+        raise SystemExit(f"health-guard overhead {overhead:.1%} exceeds "
+                         f"the 5% per-step budget")
+    # -- 2. chaos: fixed-seed fault stream must be absorbed ----------------
+    chaos_cfg = FaultConfig(enabled=True, salt=7, nan_rate=0.10,
+                            alloc_rate=0.10, stall_rate=0.02,
+                            stall_steps=3, stall_s=0.0)
+    base = run_faults_stream(cfg, params, reqs)
+    chaos = run_faults_stream(cfg, params, reqs, faults=chaos_cfg,
+                              stall_patience=4)
+    replay = run_faults_stream(cfg, params, reqs, faults=chaos_cfg,
+                               stall_patience=4)
+    f = chaos["faults"]
+    by = " ".join(f"{k}={v}" for k, v in f["by_site"].items())
+    print(f"serve_chaos,{chaos['us_per_step']:.0f},steps={chaos['steps']}"
+          f";injected={f['injected']};{by}"
+          f";recoveries={chaos['recoveries']};failed={chaos['failed']}")
+    if f["injected"] == 0:
+        raise SystemExit("chaos arm injected zero faults -- the gate is "
+                         "vacuous; raise the rates or the request count")
+    if len(chaos["outs"]) != len(base["outs"]):
+        raise SystemExit(f"chaos run finished {len(chaos['outs'])} of "
+                         f"{len(base['outs'])} requests -- some were "
+                         f"dropped without a finish reason")
+    mismatched = []
+    for rid, o in chaos["outs"].items():
+        if o.finish_reason is None:
+            raise SystemExit(f"chaos req {rid} has no finish_reason")
+        if o.error is None and o.tokens != base["tokens"][rid]:
+            mismatched.append(rid)
+    if mismatched:
+        raise SystemExit(f"chaos requests {mismatched} recovered but are "
+                         f"not token-identical to the fault-free run")
+    if (replay["tokens"] != chaos["tokens"]
+            or replay["faults"] != chaos["faults"]):
+        raise SystemExit("chaos replay diverged: same salt + rates + "
+                         "stream must inject and recover identically")
+    print(f"serve_chaos_replay,0,identical=True"
+          f";failed_with_error={chaos['failed']}")
+    return overhead
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=16)
@@ -679,6 +787,10 @@ def main():
     ap.add_argument("--audit-only", action="store_true",
                     help="run only the shadow-audit section (the CI "
                          "audit-bench CSV artifact)")
+    ap.add_argument("--faults-only", action="store_true",
+                    help="run only the fault-tolerance section (the CI "
+                         "chaos CSV artifact): health-guard overhead gate "
+                         "plus a fixed-seed injected-fault stream")
     args = ap.parse_args()
 
     cfg = reduce_cfg(get_config("gpt2"))
@@ -701,6 +813,9 @@ def main():
         return
     if args.audit_only:
         bench_audit(cfg, params, rng, args.requests)
+        return
+    if args.faults_only:
+        bench_faults(cfg, params, rng, args.requests)
         return
     results = {}
     for mode in ("static", "engine"):
@@ -741,6 +856,8 @@ def main():
     bench_policy(cfg, params, rng, args.requests)
 
     bench_audit(cfg, params, rng, args.requests)
+
+    bench_faults(cfg, params, rng, args.requests)
 
 
 if __name__ == "__main__":

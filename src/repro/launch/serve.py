@@ -33,8 +33,9 @@ import numpy as np
 from repro.configs import get_config, list_archs, reduced as reduce_cfg
 from repro.models import api
 from repro.obs import ObsConfig
-from repro.serving import (AuditConfig, EngineConfig, LampEngine,
-                           PolicyConfig, SamplingParams)
+from repro.serving import (AuditConfig, EngineConfig, FaultConfig,
+                           LampEngine, PolicyConfig, QueueFullError,
+                           SamplingParams)
 from repro.serving.engine import TEXT_FAMILIES
 
 
@@ -58,7 +59,8 @@ def build_stream(rng: np.random.Generator, args, vocab: int):
         prompt = shared + rng.integers(0, vocab, size=plen).tolist()
         sampling = SamplingParams(max_new_tokens=new,
                                   temperature=args.temperature, seed=i,
-                                  top_k=args.top_k)
+                                  top_k=args.top_k,
+                                  deadline_s=getattr(args, "deadline", 0.0))
         reqs.append((float(arrivals[i]), prompt, sampling))
     return reqs
 
@@ -85,27 +87,43 @@ def serve_stream(engine: LampEngine, stream, *,
                  metrics_every: float = 0.0,
                  sleep: Optional[Callable[[float], None]] = None,
                  log: Callable[[str], None] = print,
-                 per_request: bool = True) -> List:
+                 per_request: bool = True,
+                 outputs: Optional[List] = None) -> List:
     """Drive the engine over a pre-built (arrival_s, prompt, sampling)
     stream. Every timestamp -- arrivals, idle waits, the snapshot cadence --
     comes from the engine's own clock (`engine.obs.now`), so a fake clock
-    plus a clock-advancing `sleep` makes the whole loop deterministic."""
+    plus a clock-advancing `sleep` makes the whole loop deterministic.
+
+    A bounded admission queue (EngineConfig.max_queue) rejects arrivals
+    with QueueFullError; rejected requests are logged and skipped, the
+    stream keeps serving. Pass `outputs` to share the result list with the
+    caller: requests finished before a mid-stream exception (engine fault,
+    KeyboardInterrupt) stay visible for draining and reporting."""
     clock = engine.obs.now
     if sleep is None:
         sleep = time.sleep
     t0 = clock()
     next_metrics = metrics_every
-    i, outputs = 0, []
+    i = 0
+    if outputs is None:
+        outputs = []
     while i < len(stream) or engine.has_unfinished():
         now = clock() - t0
         while i < len(stream) and stream[i][0] <= now:
             arr, prompt, sampling = stream[i]
-            engine.add_request(prompt, sampling, arrival_time=t0 + arr)
+            try:
+                engine.add_request(prompt, sampling, arrival_time=t0 + arr)
+            except QueueFullError as e:
+                log(f"[serve]   req at t={arr:.2f}s REJECTED: {e}")
             i += 1
         done = engine.step()
         outputs.extend(done)
         if per_request:
             for o in done:
+                if o.error is not None:
+                    log(f"[serve]   req {o.req_id:>3d} FAILED "
+                        f"({o.finish_reason}): {o.error}")
+                    continue
                 log(f"[serve]   req {o.req_id:>3d} done: "
                     f"prompt={len(o.prompt)} new={len(o.tokens)} "
                     f"latency={o.latency * 1e3:7.1f}ms "
@@ -203,6 +221,41 @@ def main():
                          "accept rule scores against")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-lamp", action="store_true")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request wall-clock TTL in seconds; an "
+                         "expired request is cancelled with "
+                         "finish_reason='timeout' and its blocks freed "
+                         "(0 = no deadline)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue: reject arrivals once "
+                         "this many requests are waiting (0 = unbounded)")
+    ap.add_argument("--fault-nan", type=float, default=0.0,
+                    help="deterministic fault injection: per-step "
+                         "probability of poisoning one row's logits/KV "
+                         "with NaN (exercises the health guard + recovery "
+                         "ladder)")
+    ap.add_argument("--fault-alloc", type=float, default=0.0,
+                    help="fault injection: per-step probability of failing "
+                         "the next KV-block allocation (degrades to "
+                         "deferral, never crashes)")
+    ap.add_argument("--fault-draft", type=float, default=0.0,
+                    help="fault injection: per-step probability of "
+                         "corrupting one row's speculative draft tokens "
+                         "(the verifier rejects them)")
+    ap.add_argument("--fault-step", type=float, default=0.0,
+                    help="fault injection: per-step probability of a "
+                         "fused-step launch anomaly (degrades that step to "
+                         "the split twin)")
+    ap.add_argument("--fault-stall", type=float, default=0.0,
+                    help="fault injection: per-step probability of an "
+                         "artificial stall (no-progress steps the "
+                         "watchdog must clear)")
+    ap.add_argument("--fault-salt", type=int, default=0,
+                    help="salt for the deterministic fault hash: same "
+                         "salt + rates + stream replays the same faults "
+                         "bit-for-bit")
+    ap.add_argument("--fault-max", type=int, default=0,
+                    help="cap total injected faults (0 = unlimited)")
     ap.add_argument("--metrics-every", type=float, default=0.0,
                     help="print a one-line metrics snapshot every S seconds "
                          "of stream time (0 = off)")
@@ -236,6 +289,13 @@ def main():
     policy = PolicyConfig(enabled=args.policy,
                           target_rate=args.target_recompute_rate,
                           latency_slo_s=args.latency_slo)
+    fault_rates = dict(nan_rate=args.fault_nan, alloc_rate=args.fault_alloc,
+                       draft_rate=args.fault_draft,
+                       step_rate=args.fault_step,
+                       stall_rate=args.fault_stall)
+    faults = FaultConfig(enabled=any(r > 0 for r in fault_rates.values()),
+                         salt=args.fault_salt, max_faults=args.fault_max,
+                         **fault_rates)
     engine = LampEngine(cfg, params, EngineConfig(
         block_size=args.block_size, n_blocks=args.n_blocks,
         max_model_len=max_len, use_lamp=not args.no_lamp,
@@ -245,7 +305,8 @@ def main():
         kernel=args.kernel, speculative=args.speculative,
         draft_len=args.draft_len, fused_step=args.fused,
         obs=obs, policy=policy,
-        audit=AuditConfig(rate=args.audit_rate)))
+        audit=AuditConfig(rate=args.audit_rate),
+        faults=faults, max_queue=args.max_queue))
 
     rng = np.random.default_rng(args.seed)
     stream = build_stream(rng, args, cfg.vocab)
@@ -256,13 +317,48 @@ def main():
           f"chunked_prefill={args.chunked_prefill} kernel={args.kernel} "
           f"policy={args.policy} fused={args.fused}")
 
-    with engine.obs.profile():
-        outputs = serve_stream(engine, stream,
-                               metrics_every=args.metrics_every)
+    outputs: List = []
+    exit_code = 0
+    try:
+        with engine.obs.profile():
+            serve_stream(engine, stream, metrics_every=args.metrics_every,
+                         outputs=outputs)
+    except KeyboardInterrupt:
+        # graceful shutdown: drain what is already admitted (bounded by the
+        # watchdog) so no in-flight request is silently dropped, then fall
+        # through to the report + artifact flush below
+        exit_code = 130
+        live = engine.stats()["live_requests"]
+        print(f"\n[serve] interrupted with {live} request(s) in flight -- "
+              f"draining before shutdown (^C again to abandon)")
+        try:
+            outputs.extend(engine.run_to_completion())
+        except (KeyboardInterrupt, RuntimeError) as e:
+            print(f"[serve] drain abandoned: {e!r}")
+    except RuntimeError as e:
+        # engine gave up (hung stream past the watchdog, invariant
+        # violation): report and flush what we have, exit non-zero
+        exit_code = 1
+        print(f"[serve] stream failed: {e}")
 
     # end-of-run report: exact percentiles over every finished request
     # (the periodic lines above use the streaming histogram estimates)
     s = engine.stats(exact=True)
+    # flush artifacts FIRST: an interrupted or failed run must still leave
+    # its trace/metrics/audit files behind for forensics
+    if args.audit_out:
+        with open(args.audit_out, "w") as f:
+            json.dump(s["audit"], f, indent=1)
+        print(f"[serve] wrote audit summary to {args.audit_out}")
+    if args.trace_out:
+        path = engine.write_trace()
+        n = len(engine.obs.tracer.events())
+        print(f"[serve] wrote Chrome trace ({n} events, "
+              f"{engine.obs.tracer.dropped} dropped) to {path}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(engine.metrics_snapshot(), f, indent=1)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
     mean_rate = (np.mean([o.lamp_recompute_rate for o in outputs])
                  if outputs else 0.0)
     shape = (f"{s['mixed_steps']} mixed steps, {s['launches']} launches"
@@ -329,10 +425,6 @@ def main():
         else:
             print("[serve] audit: disabled (--no-lamp runs have no LAMP "
                   "error to measure)")
-    if args.audit_out:
-        with open(args.audit_out, "w") as f:
-            json.dump(s["audit"], f, indent=1)
-        print(f"[serve] wrote audit summary to {args.audit_out}")
     if args.speculative:
         acc = [o.spec_acceptance_rate for o in outputs if o.spec_drafted]
         print(f"[serve] speculative: {s['spec_rounds']} rounds, "
@@ -340,15 +432,30 @@ def main():
               f"(per-request mean {np.mean(acc) if acc else 0.0:.2%}), "
               f"{s['spec_tokens_per_round']:.2f} tokens/round, "
               f"verify recompute rate {s['verify_recompute_rate']:.4f}")
-    if args.trace_out:
-        path = engine.write_trace()
-        n = len(engine.obs.tracer.events())
-        print(f"[serve] wrote Chrome trace ({n} events, "
-              f"{engine.obs.tracer.dropped} dropped) to {path}")
-    if args.metrics_out:
-        with open(args.metrics_out, "w") as f:
-            json.dump(engine.metrics_snapshot(), f, indent=1)
-        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
+    if s["faults"]["enabled"] or s["recoveries"] or s["failed_requests"]:
+        f = s["faults"]
+        by = (" ".join(f"{k}={v}" for k, v in f["by_site"].items())
+              if f["enabled"] else "off")
+        print(f"[serve] faults: injected="
+              f"{f['injected'] if f['enabled'] else 0} ({by}), "
+              f"recoveries={s['recoveries']}, "
+              f"failed_requests={s['failed_requests']}")
+
+    # exit non-zero when any request was individually failed (timeout,
+    # exhausted recovery ladder, stall eviction) or rejected at admission,
+    # so CI chaos runs can gate on a clean stream
+    failed = [o for o in outputs if o.error is not None]
+    rejected = args.num_requests - len(outputs) if exit_code != 130 else 0
+    for o in failed:
+        print(f"[serve] FAILED req {o.req_id} ({o.finish_reason}): "
+              f"{o.error}")
+    if rejected > 0:
+        print(f"[serve] {rejected} request(s) rejected at admission "
+              f"(queue bound {args.max_queue})")
+    if exit_code == 0 and (failed or rejected > 0):
+        exit_code = 1
+    if exit_code:
+        raise SystemExit(exit_code)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,11 @@ vLLM-style serving architecture over the repro model stack:
                   actuation (traced operands, zero recompiles) driven by
                   recompute-rate telemetry, with load-aware graceful
                   degradation of draft length and rule tier
+  faults.py    -- deterministic fault injection: seeded, hash-sampled fault
+                  sites (NaN poisoning, allocation failure, draft
+                  corruption, fused-step anomaly, stall) replayable
+                  bit-for-bit; drives the engine's health guard, recovery
+                  ladder, and watchdog under test
 
 Observability lives in `repro.obs` (metrics registry, step-phase tracer,
 compile-event log); every engine carries an `Observability` bundle at
@@ -31,7 +36,9 @@ compile-event log); every engine carries an `Observability` bundle at
 
 from repro.obs.audit import AuditConfig
 
-from .engine import EngineConfig, LampEngine, RequestOutput
+from .engine import EngineConfig, LampEngine, QueueFullError, RequestOutput
+from .faults import (FAULT_SITES, ArenaAllocFault, FaultConfig, FaultError,
+                     FaultInjector, StepLaunchFault, fault_hash)
 from .kv_pool import PagedKVPool
 from .policy import (MODE_NAMES, MODE_NORMAL, MODE_RELAXED, MODE_SHED,
                      PolicyActions, PolicyConfig, PolicyController,
@@ -45,5 +52,7 @@ __all__ = [
     "SamplingParams", "Sequence", "SequenceStatus", "Scheduler", "StepPlan",
     "SpecConfig", "PolicyConfig", "PolicyController", "PolicySignals",
     "PolicyActions", "MODE_NAMES", "MODE_NORMAL", "MODE_RELAXED",
-    "MODE_SHED", "AuditConfig",
+    "MODE_SHED", "AuditConfig", "QueueFullError", "FAULT_SITES",
+    "FaultConfig", "FaultInjector", "FaultError", "ArenaAllocFault",
+    "StepLaunchFault", "fault_hash",
 ]

@@ -66,6 +66,7 @@ from repro.obs import ObsConfig, Observability
 from repro.obs.audit import AuditConfig, ShadowAuditor
 
 from . import sampling
+from .faults import (FaultConfig, FaultInjector, StepLaunchFault)
 from .fn_cache import STEP_FNS
 from .kv_pool import PagedKVPool
 from .policy import PolicyConfig, PolicyController, PolicySignals
@@ -76,6 +77,12 @@ from .speculative import SpecConfig, spec_step_fns, speculative_accept
 # families the paged-KV engine can serve (no per-request side inputs, no
 # state-space cache); launchers use this to filter the arch registry.
 TEXT_FAMILIES = ("dense", "moe", "gpt2")
+
+
+class QueueFullError(RuntimeError):
+    """Raised by `add_request` when the bounded admission queue
+    (`EngineConfig.max_queue`) is full: explicit backpressure instead of an
+    unbounded waiting deque under overload."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -141,6 +148,30 @@ class EngineConfig:
     # finished RequestOutputs retained for exact end-of-run percentiles;
     # older entries age out so a long-lived engine's memory stays bounded
     finished_retention: int = 1024
+    # -- fault tolerance (serving/faults.py) --------------------------------
+    # deterministic fault injection: seeded chaos behind named sites; the
+    # default (enabled=False) constructs no injector at all
+    faults: FaultConfig = FaultConfig()
+    # numerical health guard: every jitted step returns a per-row health
+    # scalar (max |final logit| over the row's live positions, in-jit, so
+    # the check itself costs one reduce); the guard quarantines non-finite
+    # rows host-side and retries them through the recovery ladder
+    # (retry -> strict rule -> gather kernel -> FP32 reference, bounded by
+    # max_retries) before failing the request alone. health_max_abs > 0
+    # additionally treats |logit| above it as unhealthy (0 = finite-only)
+    health_guard: bool = True
+    health_max_abs: float = 0.0
+    max_retries: int = 4
+    # bounded admission queue: add_request raises QueueFullError once this
+    # many requests are waiting (0 = unbounded, the historical behavior)
+    max_queue: int = 0
+    # stall watchdog: consecutive no-progress steps run_to_completion
+    # tolerates before attempting recovery (evict the stalled rows,
+    # continue) and, only if recovery changes nothing, raising
+    stall_patience: int = 64
+    # paranoid mode: run pool.check_invariants() against every live
+    # sequence after every step (recovery paths always check)
+    paranoid: bool = False
 
 
 @dataclasses.dataclass
@@ -167,6 +198,9 @@ class RequestOutput:
     audit_samples: int = 0
     audit_err_sum: float = 0.0
     audit_flips: int = 0
+    # set only on individually-failed requests (finish_reason "timeout" /
+    # "unhealthy" / "stalled"): the diagnostic the engine failed them with
+    error: Optional[str] = None
 
     @property
     def lamp_recompute_rate(self) -> float:
@@ -233,18 +267,25 @@ def _jitted_steps(cfg, use_lamp: bool, kernel: str = "gather",
             logits, arena, (nsel, nval) = transformer.paged_prefill_window(
                 cfg, params, tokens, {"k": k, "v": v}, bt, starts, lengths,
                 use_lamp=use_lamp, kernel=kernel, per_layer=True, taus=taus)
-            nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
+            lg = logits[:, -1]
+            nxt = sampling.sample_rows(lg, seeds, counts, temps,
                                        top_k=topks if use_topk else None)
-            return nxt, arena["k"], arena["v"], nsel, nval
+            # per-row numerical health for the engine's guard: max |final
+            # logit| (NaN/Inf propagate through the reduce). One in-jit
+            # reduction -- the guard's whole device-side cost
+            health = jnp.max(jnp.abs(lg), axis=-1)
+            return nxt, health, arena["k"], arena["v"], nsel, nval
 
         def _decode(params, k, v, bt, lengths, tokens, taus, seeds, counts,
                     temps, topks):
             logits, arena, (nsel, nval) = transformer.paged_decode_step(
                 cfg, params, {"k": k, "v": v}, bt, lengths, tokens,
                 use_lamp=use_lamp, kernel=kernel, per_layer=True, taus=taus)
-            nxt = sampling.sample_rows(logits[:, -1], seeds, counts, temps,
+            lg = logits[:, -1]
+            nxt = sampling.sample_rows(lg, seeds, counts, temps,
                                        top_k=topks if use_topk else None)
-            return nxt, arena["k"], arena["v"], nsel, nval
+            health = jnp.max(jnp.abs(lg), axis=-1)
+            return nxt, health, arena["k"], arena["v"], nsel, nval
 
         return (jax.jit(_prefill, donate_argnums=(1, 2)),
                 jax.jit(_decode, donate_argnums=(1, 2)))
@@ -288,7 +329,15 @@ def _mixed_spec_step(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
             emit, n_acc = speculative_accept(
                 logits[:, :k + 1], dt, dl, kd, seeds, counts, temps,
                 topks if use_topk else None)
-            return nxt, emit, n_acc, arena["k"], arena["v"], nsel, nval
+            # per-row health over each row's *live* window positions only
+            # (all_logits=True keeps kernel garbage past qlens[b], which
+            # must not poison the check)
+            live = jnp.arange(logits.shape[1])[None, :] < qlens[:, None]
+            health = jnp.max(
+                jnp.where(live[..., None], jnp.abs(logits), 0.0),
+                axis=(1, 2))
+            return nxt, emit, n_acc, health, arena["k"], arena["v"], \
+                nsel, nval
 
         return jax.jit(_mixed, donate_argnums=(1, 2))
 
@@ -461,6 +510,18 @@ class LampEngine:
         self._h_ttft = reg.histogram(
             "engine_request_ttft_seconds",
             help="request arrival -> first token", unit="s")
+        # -- fault tolerance: recovery actions by kind, failed requests by
+        # cause (the fault-injection counter itself lives in FaultInjector)
+        self._c_recover_fam = reg.counter(
+            "engine_recoveries_total",
+            help="recovery actions absorbed without failing the engine "
+                 "(retry rungs, alloc deferrals, split fallbacks, stall "
+                 "evictions)", labels=("action",))
+        self._c_recover: Dict[str, Any] = {}
+        self._c_failed_fam = reg.counter(
+            "engine_requests_failed_total",
+            help="requests individually failed (engine kept serving)",
+            labels=("reason",))
         # per-layer accumulators mirrored into the counters above (numpy so
         # the per-step update is one vector add), plus a bounded time series
         # of instantaneous per-layer recompute rates
@@ -497,6 +558,20 @@ class LampEngine:
         self.auditor: Optional[ShadowAuditor] = None
         if econfig.audit.rate > 0 and econfig.use_lamp:
             self.auditor = ShadowAuditor(econfig.audit, L, self.obs)
+
+        # -- fault tolerance: deterministic injector (None when disabled:
+        # zero hot-path cost), the quarantine of rows the health guard
+        # pulled out of this step, failures to merge into step() output,
+        # and host tallies the watchdog / policy read
+        self.faults: Optional[FaultInjector] = (
+            FaultInjector(econfig.faults, self.obs)
+            if econfig.faults.enabled else None)
+        self._quarantine: List[tuple] = []
+        self._step_failures: List[RequestOutput] = []
+        self._n_failed = 0
+        self._n_recoveries = 0
+        self._last_alloc_degrades = 0
+        self._has_deadlines = False
 
     # -- legacy counter attributes: views over the metrics registry ----------
 
@@ -628,11 +703,22 @@ class LampEngine:
                 f"prompt({len(prompt)}) + max_new_tokens"
                 f"({sampling.max_new_tokens}) exceeds max_model_len "
                 f"{self.max_model_len}")
+        if self.econfig.max_queue and \
+                len(self.scheduler.waiting) >= self.econfig.max_queue:
+            self._c_failed_fam.labels("queue_full").inc()
+            if self.obs.tracer.enabled:
+                self.obs.tracer.instant("reject", cat="fault",
+                                        reason="queue_full")
+            raise QueueFullError(
+                f"admission queue full ({self.econfig.max_queue} waiting); "
+                f"retry later or raise EngineConfig.max_queue")
         req_id = self._next_id
         self._next_id += 1
         seq = Sequence(req_id, prompt, sampling,
                        arrival_time if arrival_time is not None
                        else self._now())
+        if sampling.deadline_s > 0:
+            self._has_deadlines = True
         self._seqs[req_id] = seq
         self.scheduler.add(seq)
         return req_id
@@ -643,14 +729,35 @@ class LampEngine:
     # -- the step loop ------------------------------------------------------
 
     def step(self) -> List[RequestOutput]:
-        """Run one engine step; returns requests finished by this step."""
+        """Run one engine step; returns requests finished by this step
+        (successfully or -- with `RequestOutput.error` set -- failed)."""
         if self._start is None:
             self._start = self._now()
         t0 = self._now()
+        step_id = self.total_steps
+        inj = self.faults
+        if inj is not None and inj.maybe_stall(step_id):
+            # injected stall: the step schedules nothing and reports the
+            # configured latency spike, so the policy sees the pressure and
+            # the run_to_completion watchdog sees no progress
+            self._last_step_wall = inj.config.stall_s
+            if self.policy is not None:
+                self._policy_update()
+            return self._drain_failures()
+        if self._has_deadlines:
+            self._expire_deadlines()
+        if inj is not None and inj.fires(step_id, "alloc"):
+            self.pool.arm_alloc_failure(1)
+            inj.record(step_id, "alloc")
         with self.obs.span("schedule"):
             plan = self.scheduler.schedule()
+        d_alloc = (self.scheduler.alloc_fault_degrades
+                   - self._last_alloc_degrades)
+        if d_alloc:
+            self._last_alloc_degrades = self.scheduler.alloc_fault_degrades
+            self._recover("alloc_defer", n=d_alloc)
         if plan is None:
-            return []
+            return self._drain_failures()
         # audit rows are *captured* before the sub-step runs (it mutates
         # cursors, tokens and -- via rollback -- block tables) and *executed*
         # after it, against the post-step arena: the audited window rewrites
@@ -665,7 +772,21 @@ class LampEngine:
             if self.econfig.mixed_exec == "split":
                 self._step_mixed_split(plan)
             else:
-                self._step_mixed(plan)
+                try:
+                    if inj is not None and inj.fires(step_id, "step"):
+                        inj.record(step_id, "step")
+                        raise StepLaunchFault(
+                            "injected fused-step launch failure")
+                    self._step_mixed(plan)
+                except StepLaunchFault:
+                    # fused-step anomaly: degrade this step to the split
+                    # twin -- same plan, same tokens, two/three launches.
+                    # Only the *injected* fault type is caught (it is
+                    # raised before any launch, so no bookkeeping or
+                    # donated-arena state has moved); real exceptions stay
+                    # loud rather than risk re-running a half-applied step
+                    self._recover("split_fallback")
+                    self._step_mixed_split(plan)
             self._c_mixed_steps.inc()
             roles = plan.roles or []
             if any(r == "prefill" for r in roles):
@@ -683,6 +804,13 @@ class LampEngine:
             # step is the same progress at a fraction of the compute
             self._step_decode(plan.seqs)
             self._c_decode_steps.inc()
+        if self._quarantine:
+            # rows the health guard pulled out of the sub-step: retry each
+            # through the recovery ladder (or fail it alone), then prove
+            # the pool survived the surgery
+            with self.obs.span("recover", rows=len(self._quarantine)):
+                self._drain_quarantine()
+            self.pool.check_invariants(self._seqs.values())
         self._util_sum += self.pool.utilization
         self._util_n += 1
         if audit_batch is not None:
@@ -691,6 +819,9 @@ class LampEngine:
             self._run_audit(audit_batch)
         with self.obs.span("emit"):
             done = self._collect_finished(plan.seqs)
+        done.extend(self._drain_failures())
+        if self.econfig.paranoid:
+            self.pool.check_invariants(self._seqs.values())
         self._last_step_wall = self._now() - t0
         if self.policy is not None:
             self._policy_update()
@@ -717,7 +848,8 @@ class LampEngine:
             preemptions=self.scheduler.num_preemptions,
             step_latency_s=self._last_step_wall,
             spec_acceptance=(self.spec_accepted / drafted
-                            if drafted else 0.0))
+                            if drafted else 0.0),
+            recoveries=self._n_recoveries)
         act = self.policy.update(sig)
         if self.policy.config.frozen:
             return
@@ -849,6 +981,252 @@ class LampEngine:
         for i, seq in enumerate(seqs):
             seq.lamp.add_layers(nsel[:, i], nval[:, i])
 
+    # -- fault tolerance ----------------------------------------------------
+
+    def _recover(self, action: str, n: int = 1, **detail) -> None:
+        """Account one absorbed recovery action (metric + trace + the host
+        tally the policy ladder and stats() read)."""
+        c = self._c_recover.get(action)
+        if c is None:
+            c = self._c_recover[action] = self._c_recover_fam.labels(action)
+        c.inc(n)
+        self._n_recoveries += n
+        if self.obs.tracer.enabled:
+            self.obs.tracer.instant(f"recover:{action}", cat="fault",
+                                    **detail)
+
+    def _unhealthy(self, h: float) -> bool:
+        h = float(h)
+        if not np.isfinite(h):
+            return True
+        cap = self.econfig.health_max_abs
+        return cap > 0 and h > cap
+
+    def _inject_nan(self, seqs: List[Sequence], health: np.ndarray,
+                    spans: List[tuple]) -> np.ndarray:
+        """Fault site "nan": poison one deterministic victim row -- its
+        health value goes NaN and the arena KV positions it wrote this step
+        (`spans[row]` = (start, width), exactly what its recovery retry
+        rewrites) are overwritten with NaN. With the guard off, the
+        corruption propagates like a real kernel fault would."""
+        inj = self.faults
+        step_id = self.total_steps
+        if inj is None or not inj.fires(step_id, "nan"):
+            return health
+        row = inj.pick_row(step_id, "nan", [s.req_id for s in seqs])
+        if row is None:
+            return health
+        seq = seqs[row]
+        start, width = spans[row]
+        bs = self.pool.block_size
+        pos = [p for p in range(start, start + width)
+               if p // bs < len(seq.block_ids)]
+        if pos:
+            blocks = jnp.asarray([seq.block_ids[p // bs] for p in pos])
+            offs = jnp.asarray([p % bs for p in pos])
+            self.pool.k = self.pool.k.at[:, blocks, offs].set(jnp.nan)
+            self.pool.v = self.pool.v.at[:, blocks, offs].set(jnp.nan)
+        health = np.array(health, np.float64)
+        health[row] = np.nan
+        inj.record(step_id, "nan", req=seq.req_id, start=start, width=width)
+        return health
+
+    def _inject_draft(self, dseqs: List[Sequence], kdv, d_toks, vocab: int):
+        """Fault site "draft": corrupt one drafting row's proposals (each
+        token bumped mod vocab). No dedicated recovery: the verify pass IS
+        the recovery -- corrupted proposals disagree with the verifier and
+        are rejected (greedy streams stay token-identical; a sampled
+        stream's accept coin may keep a corrupt but plausible token, which
+        is exactly the corruption-tolerance boundary this site probes)."""
+        inj = self.faults
+        step_id = self.total_steps
+        if inj is None or not inj.fires(step_id, "draft"):
+            return d_toks
+        rows = [j for j in range(len(dseqs)) if int(kdv[j]) > 0]
+        if not rows:
+            return d_toks
+        pick = inj.pick_row(step_id, "draft",
+                            [dseqs[j].req_id for j in rows])
+        j = rows[pick]
+        d_toks = d_toks.at[j].set((d_toks[j] + 1) % jnp.int32(vocab))
+        inj.record(step_id, "draft", req=dseqs[j].req_id)
+        return d_toks
+
+    def _retry_ladder(self) -> List[tuple]:
+        """(action, cfg, use_lamp, kernel) escalation rungs for retrying a
+        quarantined row, cheapest first: (0) plain re-run of the step's own
+        configuration -- transient faults (and every injected one) recover
+        here bit-identically, because sampling is keyed on
+        (seed, num_generated), not on wall time or batch shape; (1) the
+        strict LAMP rule -- maximal selective recompute; (2) the gather
+        reference kernel -- rules out the fused Pallas path; (3) FP32
+        reference -- no LAMP at all. Bounded by EngineConfig.max_retries."""
+        e = self.econfig
+        ladder = [("retry", self._serving_cfg(), e.use_lamp, e.kernel)]
+        if e.use_lamp and self.cfg.lamp.kq.enabled \
+                and self.cfg.lamp.kq.rule != "strict":
+            pol = self.cfg.lamp
+            strict = self.cfg.replace(
+                lamp=pol.replace(kq=pol.kq.replace(rule="strict")))
+            ladder.append(("strict", strict, True, e.kernel))
+        if e.kernel != "gather":
+            _, pcfg, plamp, _ = ladder[-1]
+            ladder.append(("gather", pcfg, plamp, "gather"))
+        ladder.append(("fp32", self.cfg, False, "gather"))
+        return ladder[:max(1, e.max_retries)]
+
+    def _retry_row(self, seq: Sequence, kind: str, window: int,
+                   rcfg, rlamp: bool, rkernel: str) -> bool:
+        """Re-run one quarantined row's window as a single-row prefill
+        launch (decode is a width-1 window) under a ladder rung's
+        configuration. Healthy result: apply the normal bookkeeping the
+        quarantine skipped and return True; still unhealthy: leave the
+        sequence untouched for the next rung."""
+        prefill_fn, _ = _jitted_steps(rcfg, rlamp, rkernel,
+                                      seq.sampling.top_k > 0)
+        Wb = _bucket(window, 0)
+        tokens = np.zeros((1, Wb), np.int32)
+        if kind == "prefill":
+            start = seq.prefill_cursor
+            tokens[0, :window] = \
+                seq.prefill_tokens()[start:start + window]
+        else:
+            start = seq.cache_len
+            tokens[0, 0] = seq.last_token
+        bt, seeds, counts, temps, topks = self._batch_arrays([seq], 1)
+        with self.obs.span("retry", req=seq.req_id, kind=kind,
+                           window=window):
+            out = prefill_fn(
+                self.params, self.pool.k, self.pool.v, jnp.asarray(tokens),
+                jnp.asarray(bt), jnp.asarray(np.asarray([start], np.int32)),
+                jnp.asarray(np.asarray([window], np.int32)),
+                jnp.asarray(self._taus), jnp.asarray(seeds),
+                jnp.asarray(counts), jnp.asarray(temps),
+                jnp.asarray(topks))
+            jax.block_until_ready(out)
+            nxt, health, self.pool.k, self.pool.v, nsel, nval = out
+        self._c_launches["prefill"].inc()
+        if self._unhealthy(np.asarray(health)[0]):
+            return False
+        now = self._now()
+        self._account_lamp([seq], np.asarray(nsel), np.asarray(nval))
+        if kind == "prefill":
+            seq.prefill_cursor += window
+            seq.cache_len = seq.prefill_cursor
+            self._c_prefill_tokens.inc(window)
+            if self.econfig.prefix_cache:
+                self.pool.register_prefix(seq.prefill_tokens(),
+                                          seq.block_ids, seq.cache_len,
+                                          hashes=seq.prefix_hashes)
+            if seq.prefill_remaining == 0:
+                seq.status = SequenceStatus.DECODE
+                seq.on_token(int(np.asarray(nxt)[0]), now)
+                self._c_generated.inc()
+            else:
+                self._c_prefill_chunks.inc()
+        else:
+            seq.cache_len += 1
+            seq.on_token(int(np.asarray(nxt)[0]), now)
+            self._c_generated.inc()
+        return True
+
+    def _drain_quarantine(self) -> None:
+        """Walk every row the health guard quarantined this step through
+        the recovery ladder; a row no rung can produce healthy logits for
+        fails alone (diagnostic RequestOutput.error), never the engine."""
+        q, self._quarantine = self._quarantine, []
+        ladder = self._retry_ladder()
+        for seq, kind, window in q:
+            recovered = False
+            for action, rcfg, rlamp, rkernel in ladder:
+                if self._retry_row(seq, kind, window, rcfg, rlamp, rkernel):
+                    self._recover(action, req=seq.req_id)
+                    recovered = True
+                    break
+            if not recovered:
+                self._fail_seq(
+                    seq, "unhealthy",
+                    f"non-finite or out-of-range logits persisted through "
+                    f"{len(ladder)} recovery rung(s) "
+                    f"[{'/'.join(a for a, *_ in ladder)}] at {kind} "
+                    f"window={window} cache_len={seq.cache_len}")
+
+    def _fail_seq(self, seq: Sequence, reason: str, error: str) -> None:
+        """Terminal per-request failure: cancel it wherever it sits, free
+        its blocks, and emit a diagnostic RequestOutput. The engine --
+        and every other request -- keeps serving."""
+        now = self._now()
+        seq.finish(reason, now)
+        self.scheduler.cancel(seq)
+        self._c_failed_fam.labels(reason).inc()
+        if self.obs.tracer.enabled:
+            self.obs.tracer.instant("request_failed", cat="fault",
+                                    req=seq.req_id, reason=reason)
+        out = RequestOutput(
+            req_id=seq.req_id, prompt=seq.prompt, tokens=seq.generated,
+            finish_reason=reason, latency=seq.latency() or 0.0,
+            ttft=seq.ttft() or 0.0,
+            num_preemptions=seq.num_preemptions,
+            lamp_selected=seq.lamp.selected, lamp_valid=seq.lamp.valid,
+            num_cached_tokens=seq.num_cached_tokens,
+            num_resume_cached_tokens=seq.num_resume_cached_tokens,
+            spec_drafted=seq.spec_drafted,
+            spec_accepted=seq.spec_accepted,
+            audit_samples=seq.audit_samples,
+            audit_err_sum=seq.audit_err_sum,
+            audit_flips=seq.audit_flips,
+            error=error)
+        self._finished.append(out)
+        self._n_failed += 1
+        self._seqs.pop(seq.req_id, None)
+        self._step_failures.append(out)
+
+    def _drain_failures(self) -> List[RequestOutput]:
+        if not self._step_failures:
+            return []
+        out, self._step_failures = self._step_failures, []
+        return out
+
+    def _expire_deadlines(self) -> None:
+        """Cancel requests whose wall-clock TTL elapsed (blocks released,
+        finish_reason "timeout"); runs before scheduling so an expired
+        request never costs another step of compute."""
+        now = self._now()
+        for seq in [s for s in self._seqs.values()
+                    if s.sampling.deadline_s > 0 and not s.is_finished
+                    and now - s.arrival_time > s.sampling.deadline_s]:
+            self._fail_seq(
+                seq, "timeout",
+                f"deadline_s={seq.sampling.deadline_s} exceeded after "
+                f"{now - seq.arrival_time:.3f}s "
+                f"({seq.num_generated} tokens generated)")
+
+    def _stall_recover(self) -> bool:
+        """The watchdog's recovery attempt after `stall_patience` steps
+        without progress. Cheapest plausible fix first: clear an injected
+        stall; else evict every running row (recompute-style, so resumed
+        token streams are identical); else fail the oldest waiting request.
+        Returns False when nothing changed -- the caller then raises."""
+        if self.faults is not None and self.faults.stalled:
+            self.faults.clear_stall()
+            self._recover("stall_clear")
+            return True
+        acted = False
+        evicted = 0
+        while self.scheduler._preempt_youngest():
+            evicted += 1
+        if evicted:
+            self._recover("stall_evict", n=evicted)
+            acted = True
+        elif self.scheduler.waiting:
+            self._fail_seq(
+                self.scheduler.waiting[0], "stalled",
+                f"no step progress for {self.econfig.stall_patience} "
+                f"steps with the request still queued")
+            acted = True
+        self.pool.check_invariants(self._seqs.values())
+        return acted
+
     def _step_prefill(self, seqs: List[Sequence],
                       windows: List[int]) -> None:
         """Run one prefill window per sequence: the whole remaining prompt,
@@ -878,15 +1256,24 @@ class LampEngine:
         self._c_launches["prefill"].inc()
         with self.obs.span("sync"):
             jax.block_until_ready(out)
-            nxt, self.pool.k, self.pool.v, nsel, nval = out
-            nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
-                               np.asarray(nval))
+            nxt, health, self.pool.k, self.pool.v, nsel, nval = out
+            nxt, health, nsel, nval = (np.asarray(nxt), np.asarray(health),
+                                       np.asarray(nsel), np.asarray(nval))
         if n0 >= 0 and _cache_size(prefill_fn) > n0:
             self.obs.record_compile("prefill", (Bb, Wb), sp.elapsed,
                                     self.total_steps)
+        health = self._inject_nan(
+            seqs, health,
+            [(s.prefill_cursor, w) for s, w in zip(seqs, windows)])
+        guard = self.econfig.health_guard
         now = self._now()
         self._account_lamp(seqs, nsel, nval)
         for i, (seq, w) in enumerate(zip(seqs, windows)):
+            if guard and self._unhealthy(health[i]):
+                # skip ALL bookkeeping: cursor stays, the retry rewrites
+                # the same window over the same (possibly poisoned) blocks
+                self._quarantine.append((seq, "prefill", w))
+                continue
             seq.prefill_cursor += w
             seq.cache_len = seq.prefill_cursor
             self._c_prefill_tokens.inc(w)
@@ -923,15 +1310,21 @@ class LampEngine:
         self._c_launches["decode"].inc()
         with self.obs.span("sync"):
             jax.block_until_ready(out)
-            nxt, self.pool.k, self.pool.v, nsel, nval = out
-            nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
-                               np.asarray(nval))
+            nxt, health, self.pool.k, self.pool.v, nsel, nval = out
+            nxt, health, nsel, nval = (np.asarray(nxt), np.asarray(health),
+                                       np.asarray(nsel), np.asarray(nval))
         if n0 >= 0 and _cache_size(decode_fn) > n0:
             self.obs.record_compile("decode", (Rb,), sp.elapsed,
                                     self.total_steps)
+        health = self._inject_nan(seqs, health,
+                                  [(s.cache_len, 1) for s in seqs])
+        guard = self.econfig.health_guard
         now = self._now()
         self._account_lamp(seqs, nsel, nval)
         for i, seq in enumerate(seqs):
+            if guard and self._unhealthy(health[i]):
+                self._quarantine.append((seq, "decode", 1))
+                continue
             seq.cache_len += 1
             seq.on_token(int(nxt[i]), now)
             self._c_generated.inc()
@@ -965,6 +1358,8 @@ class LampEngine:
                 self.params, self.pool.k, self.pool.v, bt, lengths, tok0,
                 kd, taus, seeds, counts, temps, topks)
         self._c_launches["draft"].inc()
+        d_toks = self._inject_draft(seqs, draft_lens, d_toks,
+                                    d_logits.shape[-1])
         with self.obs.span("verify", rows=len(seqs), bucket=[Rb]) as spv:
             out = verify_fn(
                 self.params, self.pool.k, self.pool.v, tok0, d_toks,
@@ -973,18 +1368,36 @@ class LampEngine:
         self._c_launches["verify"].inc()
         with self.obs.span("sync"):
             jax.block_until_ready(out)
-            emit, n_acc, self.pool.k, self.pool.v, nsel, nval = out
-            emit, n_acc, nsel, nval = (np.asarray(emit), np.asarray(n_acc),
-                                       np.asarray(nsel), np.asarray(nval))
+            emit, n_acc, health, self.pool.k, self.pool.v, nsel, nval = out
+            emit, n_acc, health, nsel, nval = (
+                np.asarray(emit), np.asarray(n_acc), np.asarray(health),
+                np.asarray(nsel), np.asarray(nval))
         if n0d >= 0 and _cache_size(draft_fn) > n0d:
             self.obs.record_compile("draft", (Rb,), spd.elapsed,
                                     self.total_steps)
         if n0v >= 0 and _cache_size(verify_fn) > n0v:
             self.obs.record_compile("verify", (Rb,), spv.elapsed,
                                     self.total_steps)
+        # poison width 1 even for drafted rows: the quarantine retries a
+        # verify row as a plain decode, which rewrites only position
+        # cache_len -- poison past it would outlive the recovery (the
+        # rolled-back draft positions can share the kept tail block, and
+        # the gather kernel streams the whole block span)
+        health = self._inject_nan(seqs, health,
+                                  [(s.cache_len, 1) for s in seqs])
+        guard = self.econfig.health_guard
         now = self._now()
         self._account_lamp(seqs, nsel, nval, verify=True)
         for i, seq in enumerate(seqs):
+            if guard and self._unhealthy(health[i]):
+                # discard the whole round for this row (no drafted/accepted
+                # accounting), free the draft-span blocks -- keeping one
+                # slot past cache_len so the width-1 retry's write position
+                # stays covered -- and retry as a plain decode step
+                seq.block_ids = self.pool.rollback(seq.block_ids,
+                                                   seq.cache_len + 1)
+                self._quarantine.append((seq, "decode", 1))
+                continue
             a = int(n_acc[i])
             seq.spec_drafted += int(draft_lens[i])
             self._c_spec_drafted.inc(int(draft_lens[i]))
@@ -1069,9 +1482,10 @@ class LampEngine:
             self._c_launches["mixed"].inc()
             with self.obs.span("sync"):
                 jax.block_until_ready(out)
-                nxt, self.pool.k, self.pool.v, nsel, nval = out
-                nxt, nsel, nval = (np.asarray(nxt), np.asarray(nsel),
-                                   np.asarray(nval))
+                nxt, health, self.pool.k, self.pool.v, nsel, nval = out
+                nxt, health, nsel, nval = (
+                    np.asarray(nxt), np.asarray(health), np.asarray(nsel),
+                    np.asarray(nval))
         else:
             dseqs = [seqs[i] for i in dec_rows]
             Rb = _bucket(len(dseqs), self.econfig.max_decode_batch)
@@ -1098,6 +1512,8 @@ class LampEngine:
             if n0d >= 0 and _cache_size(draft_fn) > n0d:
                 self.obs.record_compile("draft", (Rb,), spd.elapsed,
                                         self.total_steps)
+            d_toks = self._inject_draft(dseqs, kdv, d_toks,
+                                        d_logits.shape[-1])
             # draft-row -> mixed-row scatter map; pad draft rows point out
             # of range, which scatter mode="drop" discards
             dec_pos = np.full((Rb,), Bb, np.int32)
@@ -1123,19 +1539,37 @@ class LampEngine:
             self._c_launches["mixed"].inc()
             with self.obs.span("sync"):
                 jax.block_until_ready(out)
-                (nxt, emit, n_acc, self.pool.k, self.pool.v, nsel,
+                (nxt, emit, n_acc, health, self.pool.k, self.pool.v, nsel,
                  nval) = out
-                nxt, emit, n_acc, nsel, nval = (
+                nxt, emit, n_acc, health, nsel, nval = (
                     np.asarray(nxt), np.asarray(emit), np.asarray(n_acc),
-                    np.asarray(nsel), np.asarray(nval))
+                    np.asarray(health), np.asarray(nsel), np.asarray(nval))
         if n0 >= 0 and _cache_size(mixed_fn) > n0:
             self.obs.record_compile("mixed", (Bb, Wb), sp.elapsed,
                                     self.total_steps)
+        # decode/verify rows poison width 1 (what the decode retry
+        # rewrites -- see _step_spec); prefill rows poison their window
+        health = self._inject_nan(
+            seqs, health,
+            [(s.prefill_cursor, windows[i]) if roles[i] == "prefill"
+             else (s.cache_len, 1) for i, s in enumerate(seqs)])
+        guard = self.econfig.health_guard
         now = self._now()
         self._account_lamp(seqs, nsel, nval,
                            verify_cols=dec_rows if spec_round else None)
         for i, seq in enumerate(seqs):
             w = windows[i]
+            if guard and self._unhealthy(health[i]):
+                if roles[i] == "prefill":
+                    self._quarantine.append((seq, "prefill", w))
+                else:
+                    # discard this row's speculative round (if any), keep
+                    # one slot past cache_len for the width-1 retry's write
+                    # position, and retry it as a plain decode step
+                    seq.block_ids = self.pool.rollback(seq.block_ids,
+                                                       seq.cache_len + 1)
+                    self._quarantine.append((seq, "decode", 1))
+                continue
             if roles[i] == "prefill":
                 seq.prefill_cursor += w
                 seq.cache_len = seq.prefill_cursor
@@ -1370,6 +1804,11 @@ class LampEngine:
             # shadow audit (obs/audit.py): realized LAMP error telemetry
             "audit": (self.auditor.stats() if self.auditor is not None
                       else {"enabled": False}),
+            # fault tolerance (serving/faults.py + the recovery ladder)
+            "recoveries": self._n_recoveries,
+            "failed_requests": self._n_failed,
+            "faults": (self.faults.stats() if self.faults is not None
+                       else {"enabled": False}),
         }
 
     def write_trace(self, path: Optional[str] = None) -> str:
@@ -1417,12 +1856,31 @@ class LampEngine:
         live, so a hung stream (scheduler stall, runaway generation) is
         loud instead of silently dropping requests; the error carries a
         diagnostic snapshot (registry scalars + trace tail) and
-        stats()["live_requests"] exposes the same condition to pollers."""
+        stats()["live_requests"] exposes the same condition to pollers.
+
+        A stall watchdog runs first: after `EngineConfig.stall_patience`
+        consecutive steps with zero progress (no tokens, no prefill, no
+        finishes, no failures) it attempts `_stall_recover()` -- clearing
+        an injected stall, evicting wedged rows, or failing the oldest
+        queued request -- and only raises when recovery changes nothing."""
         out: List[RequestOutput] = []
+        idle = 0
+        last = None
         for _ in range(max_steps):
             if not self.has_unfinished():
                 return out
             out.extend(self.step())
+            prog = (self.generated_tokens, self.prefill_tokens_run,
+                    int(self._c_finished.value), self._n_failed)
+            if prog == last:
+                idle += 1
+                if idle >= self.econfig.stall_patience:
+                    if not self._stall_recover():
+                        break
+                    idle = 0
+            else:
+                idle = 0
+                last = prog
         live = self.stats()["live_requests"]
         raise RuntimeError(
             f"run_to_completion exceeded max_steps={max_steps} with {live} "

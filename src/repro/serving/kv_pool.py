@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
+from repro.serving.faults import ArenaAllocFault
 
 NULL_BLOCK = 0
 
@@ -96,6 +97,9 @@ class PagedKVPool:
         self.hit_blocks = 0            # block allocations avoided via sharing
         self.cow_copies = 0
         self.evictions = 0             # cached-free blocks reclaimed by alloc
+        # fault injection: when armed, the next alloc() calls raise
+        # ArenaAllocFault *before* mutating any pool state
+        self._fail_next_allocs = 0
 
     # -- accounting ---------------------------------------------------------
 
@@ -130,7 +134,18 @@ class PagedKVPool:
     def can_alloc(self, n: int) -> bool:
         return n <= self.num_free
 
+    def arm_alloc_failure(self, n: int = 1) -> None:
+        """Fault injection: make the next `n` alloc() calls raise
+        `ArenaAllocFault` before touching any pool state (the caller's
+        degradation path sees exactly what a real exhaustion at that call
+        site would, minus the exhaustion)."""
+        self._fail_next_allocs = max(self._fail_next_allocs, n)
+
     def alloc(self, n: int) -> List[int]:
+        if self._fail_next_allocs > 0:
+            self._fail_next_allocs -= 1
+            raise ArenaAllocFault(
+                f"injected allocation failure (want {n} blocks)")
         if n > self.num_free:
             raise RuntimeError(f"KV pool exhausted: want {n} blocks, "
                                f"{self.num_free} free")
@@ -299,6 +314,77 @@ class PagedKVPool:
         """True if `b` is a registered block with no live owner (reviving it
         via `share` removes it from the allocatable budget)."""
         return b in self._cached_free
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_invariants(self, sequences: Optional[Seq] = None) -> None:
+        """Full pool consistency check; raises RuntimeError on corruption.
+
+        Pool-only invariants (always checked): block conservation -- free,
+        cached-free, and owned sets are pairwise disjoint and together cover
+        every allocatable block; the free deque and free set agree; the
+        aggregate counters match the sets; the prefix index is a bijection
+        over non-free blocks with a content chunk stored per entry.
+
+        With `sequences` (every live owner of pool blocks), additionally:
+        refcounts equal the number of owning sequences per block, no table
+        holds a duplicate or free block, and the partial tail block a decode
+        write would land in is never shared or registered.
+
+        This is the test suite's fuzz oracle extracted for production use:
+        the engine runs it after every recovery path and (when
+        `EngineConfig.paranoid`) after every step, so a recovery bug
+        corrupting the pool fails loudly at the step that caused it instead
+        of as an unrelated crash thousands of steps later.
+        """
+        def _req(cond: bool, msg: str) -> None:
+            if not cond:
+                raise RuntimeError(f"KV pool invariant violated: {msg}")
+
+        free = set(self._free)
+        cached_free = set(self._cached_free)
+        owned = set(self.refcount)
+        _req(free == self._free_set, "free deque and free set disagree")
+        _req(not (free & cached_free), "block both free and cached-free")
+        _req(not (free & owned), "block both free and owned")
+        _req(not (cached_free & owned), "block both cached-free and owned")
+        _req(free | cached_free | owned == set(range(1, self.n_blocks)),
+             "block conservation: free + cached-free + owned != all blocks")
+        _req(self.num_free == len(free) + len(cached_free),
+             "num_free disagrees with the free sets")
+        _req(self.num_free + len(owned) == self.num_total,
+             "num_free + owned != num_total")
+        _req(all(rc >= 1 for rc in self.refcount.values()),
+             "owned block with refcount < 1")
+        _req(len(self._hash_to_block) == len(self._block_to_hash),
+             "prefix index is not a bijection")
+        _req(set(self._hash_to_chunk) == set(self._hash_to_block),
+             "prefix index entry without a content chunk")
+        for h, b in self._hash_to_block.items():
+            _req(self._block_to_hash.get(b) == h,
+                 f"prefix index asymmetry at block {b}")
+            _req(b not in free, f"registered block {b} on the free list")
+        if sequences is None:
+            return
+        counts: Dict[int, int] = {}
+        for seq in sequences:
+            for b in set(seq.block_ids):
+                counts[b] = counts.get(b, 0) + 1
+        _req(counts == self.refcount,
+             "refcounts disagree with sequence ownership")
+        for seq in sequences:
+            _req(len(set(seq.block_ids)) == len(seq.block_ids),
+                 f"duplicate block in table of request {seq.req_id}")
+            for b in seq.block_ids:
+                _req(0 < b < self.n_blocks,
+                     f"request {seq.req_id} table points at block {b}")
+                _req(b not in free and b not in cached_free,
+                     f"request {seq.req_id} table points at freed block {b}")
+            tail = seq.cache_len // self.block_size
+            if seq.cache_len % self.block_size and tail < len(seq.block_ids):
+                _req(not self.needs_cow(seq.block_ids[tail]),
+                     f"request {seq.req_id} decode-write tail block "
+                     f"{seq.block_ids[tail]} is shared or registered")
 
     # -- defrag -------------------------------------------------------------
 

@@ -133,6 +133,11 @@ class PolicySignals:
     preemptions: int                    # cumulative scheduler preemptions
     step_latency_s: float               # wall time of the step
     spec_acceptance: float = 0.0        # cumulative draft acceptance rate
+    recoveries: int = 0                 # cumulative engine recovery actions
+                                        # (health-guard retries, alloc
+                                        # deferrals, split fallbacks) -- a
+                                        # recovering engine is a stressed
+                                        # engine, so deltas act as pressure
 
 
 @dataclasses.dataclass
@@ -183,6 +188,7 @@ class PolicyController:
         self.actuations = 0
         self._ema: Optional[np.ndarray] = None
         self._last_preemptions = 0
+        self._last_recoveries = 0
         self._accept = 0.0
         self._updates = 0
         self._obs = obs
@@ -293,9 +299,16 @@ class PolicyController:
                          else c.ema * r + (1.0 - c.ema) * self._ema)
         d_preempt = max(0, sig.preemptions - self._last_preemptions)
         self._last_preemptions = sig.preemptions
+        d_recover = max(0, sig.recoveries - self._last_recoveries)
+        self._last_recoveries = sig.recoveries
         self._accept = sig.spec_acceptance
+        # recovery pressure rides the slo_miss rail: a step that needed a
+        # health-guard retry / alloc deferral / split fallback pushes the
+        # ladder toward RELAXED and blocks the exit to NORMAL, exactly like
+        # a latency-SLO miss
         slo_miss = (c.latency_slo_s > 0
-                    and sig.step_latency_s > c.latency_slo_s)
+                    and sig.step_latency_s > c.latency_slo_s) \
+            or d_recover > 0
 
         new_mode = self._next_mode(sig, d_preempt, slo_miss)
         mode_changed = new_mode != self.mode

@@ -34,6 +34,9 @@ class SamplingParams:
     top_k: int = 0                  # 0 = unfiltered; else sample from the
                                     # top-k logits only (also the filter the
                                     # speculative accept rule scores against)
+    deadline_s: float = 0.0         # wall-clock TTL from arrival; 0 = none.
+                                    # An expired request is cancelled with
+                                    # finish_reason="timeout", blocks freed
 
 
 @dataclasses.dataclass

@@ -46,6 +46,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, List, Optional, Set
 
+from .faults import ArenaAllocFault
 from .kv_pool import PagedKVPool, chain_hashes
 from .request import Sequence, SequenceStatus
 
@@ -91,6 +92,10 @@ class Scheduler:
         self.waiting: Deque[Sequence] = deque()
         self.running: List[Sequence] = []
         self.num_preemptions = 0
+        # allocation failures (injected or real transients) absorbed by
+        # degrading the step instead of crashing -- the engine publishes the
+        # per-step delta as engine_recoveries_total{action="alloc_defer"}
+        self.alloc_fault_degrades = 0
         self._last_was_prefill = False
 
     # -- queue ops ----------------------------------------------------------
@@ -143,8 +148,14 @@ class Scheduler:
         need = self.pool.blocks_for(seq.prefill_cursor + window) \
             - len(seq.block_ids)
         if need > 0:
-            with self._span("alloc", blocks=need, req=seq.req_id):
-                seq.block_ids.extend(self.pool.alloc(need))
+            try:
+                with self._span("alloc", blocks=need, req=seq.req_id):
+                    seq.block_ids.extend(self.pool.alloc(need))
+            except ArenaAllocFault:
+                # degrade: this row skips its chunk this step and retries
+                # next step (nothing was allocated, nothing to unwind)
+                self.alloc_fault_degrades += 1
+                return 0
         return window
 
     def _try_admit(self, seq: Sequence, want: int,
@@ -192,16 +203,27 @@ class Scheduler:
             # dropping the least-valuable cached block (the chain tail) and
             # recomputing its tokens instead
             matched = matched[:-1]
-        self.pool.share(matched)
-        seq.block_ids = list(matched)
-        if need_cow:
-            seq.block_ids[-1] = self.pool.copy_on_write(seq.block_ids[-1])
-            # the COW'd tail is not an avoided allocation (its KV is still
-            # reused, which num_cached_tokens reflects)
-            self.pool.hit_blocks -= 1
-        if need_new > 0:
-            with self._span("alloc", blocks=need_new, req=seq.req_id):
-                seq.block_ids.extend(self.pool.alloc(need_new))
+        hit0 = self.pool.hit_blocks
+        try:
+            self.pool.share(matched)
+            seq.block_ids = list(matched)
+            if need_cow:
+                seq.block_ids[-1] = self.pool.copy_on_write(seq.block_ids[-1])
+                # the COW'd tail is not an avoided allocation (its KV is
+                # still reused, which num_cached_tokens reflects)
+                self.pool.hit_blocks -= 1
+            if need_new > 0:
+                with self._span("alloc", blocks=need_new, req=seq.req_id):
+                    seq.block_ids.extend(self.pool.alloc(need_new))
+        except ArenaAllocFault:
+            # degrade: unwind the partial admission (drop the shared owners,
+            # restore the hit accounting) and defer the sequence; it stays
+            # at the front of the waiting queue and retries next step
+            self.pool.free_blocks(reversed(seq.block_ids))
+            seq.block_ids = []
+            self.pool.hit_blocks = hit0
+            self.alloc_fault_degrades += 1
+            return None
         seq.prefill_cursor = cached
         seq.cache_len = cached
         # a resumed sequence matching blocks it registered at its own
@@ -302,12 +324,18 @@ class Scheduler:
                     deficits.append(max(0, want - len(seq.block_ids)))
                     need += deficits[-1]
                 if need <= self.pool.num_free:
-                    if need > 0:
-                        with self._span("alloc", blocks=need):
-                            for seq, deficit in zip(batch, deficits):
-                                if deficit:
-                                    seq.block_ids.extend(
-                                        self.pool.alloc(deficit))
+                    try:
+                        if need > 0:
+                            with self._span("alloc", blocks=need):
+                                for seq, deficit in zip(batch, deficits):
+                                    if deficit:
+                                        seq.block_ids.extend(
+                                            self.pool.alloc(deficit))
+                    except ArenaAllocFault:
+                        # degrade and re-grant: blocks already extended stay
+                        # owned; the recomputed deficits skip them
+                        self.alloc_fault_degrades += 1
+                        continue
                     return StepPlan("decode", batch, draft_lens=draft_lens)
                 if any(draft_lens):
                     # shed speculative lookahead before evicting anyone: a
@@ -346,12 +374,16 @@ class Scheduler:
                     deficits.append(max(0, want - len(seq.block_ids)))
                     need += deficits[-1]
                 if need <= self.pool.num_free:
-                    if need > 0:
-                        with self._span("alloc", blocks=need):
-                            for seq, deficit in zip(batch, deficits):
-                                if deficit:
-                                    seq.block_ids.extend(
-                                        self.pool.alloc(deficit))
+                    try:
+                        if need > 0:
+                            with self._span("alloc", blocks=need):
+                                for seq, deficit in zip(batch, deficits):
+                                    if deficit:
+                                        seq.block_ids.extend(
+                                            self.pool.alloc(deficit))
+                    except ArenaAllocFault:
+                        self.alloc_fault_degrades += 1
+                        continue
                     return batch, draft_lens
                 if any(draft_lens):
                     draft_lens = [max(0, kd - 1) for kd in draft_lens]
@@ -441,3 +473,19 @@ class Scheduler:
         self.running.remove(seq)
         self.pool.free_blocks(reversed(seq.block_ids))
         seq.block_ids = []
+
+    def cancel(self, seq: Sequence) -> None:
+        """Remove a sequence from wherever it sits (waiting queue or running
+        set) and release its blocks: deadline expiry, health-guard failure,
+        and stall eviction all route through here. Idempotent-safe against
+        the queue/running split; freeing mirrors `finish` (tail-first)."""
+        if seq in self.running:
+            self.running.remove(seq)
+        else:
+            try:
+                self.waiting.remove(seq)
+            except ValueError:
+                pass
+        if seq.block_ids:
+            self.pool.free_blocks(reversed(seq.block_ids))
+            seq.block_ids = []

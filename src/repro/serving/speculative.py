@@ -188,11 +188,15 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
 
     verify_fn(params, k, v, tok0, draft_tokens, draft_logits, bt, lengths,
               kd, taus, seeds, counts, temps, topks)
-        -> (emit (R, k+1), n_accepted (R,), arena_k, arena_v,
+        -> (emit (R, k+1), n_accepted (R,), health (R,), arena_k, arena_v,
             n_selected (L, R), n_valid (L, R))
         one multi-token paged forward over [last_token, d_1..d_k] at
         absolute positions lengths..lengths+k with the engine's LAMP verify
         rule (rewriting those positions' KV), then `speculative_accept`.
+        `health` is max |logit| over each row's live verify positions
+        (non-finite iff the row produced a non-finite logit there; padding
+        positions past kd + 1 hold kernel garbage and are masked out) --
+        the engine's numerical health guard quarantines rows on it.
         n_selected/n_valid are the verify pass's per-layer per-row LAMP
         counts (the engine reduces them).
 
@@ -243,7 +247,13 @@ def spec_step_fns(cfg, use_lamp: bool, kernel: str, spec: SpecConfig,
         emit, n_acc = speculative_accept(
             logits, d_toks, d_logits, kd, seeds, counts, temps,
             topks if use_topk else None)
-        return emit, n_acc, arena["k"], arena["v"], nsel, nval
+        # per-row numerical health: max |logit| over the live verify span
+        # (positions past kd + 1 are kernel garbage on padded buckets and
+        # must not poison the check). NaN/Inf propagate through the max.
+        live = jnp.arange(logits.shape[1])[None, :] < (kd + 1)[:, None]
+        health = jnp.max(jnp.where(live[..., None], jnp.abs(logits), 0.0),
+                         axis=(1, 2))
+        return emit, n_acc, health, arena["k"], arena["v"], nsel, nval
 
     return STEP_FNS.get_or_build(
         key, lambda: (jax.jit(_draft, donate_argnums=(1, 2)),

@@ -1,0 +1,425 @@
+"""Chaos / fault-tolerance tests for the serving engine.
+
+The contract under test (serving/faults.py + the engine's health guard,
+recovery ladder, deadlines, admission bound, and stall watchdog):
+
+  * fault injection is deterministic: same (salt, rates, stream) injects
+    the same faults at the same steps, replayable bit-for-bit;
+  * an injected fault NEVER crashes the engine: it is absorbed (recovery
+    ladder, allocation deferral, split fallback, watchdog) or -- when
+    recovery is impossible -- fails that one request with a diagnostic
+    `RequestOutput.error`, leaving every other request untouched;
+  * recovered requests are token-identical to the fault-free run (the
+    retry replays the same (seed, num_generated)-keyed sampling stream);
+  * the KV pool's invariants (serving/kv_pool.check_invariants) hold after
+    every recovery path.
+
+Draft-corruption scenarios run greedy (temperature=0): the verifier
+provably rejects corrupted greedy drafts, while a sampled stream's accept
+coin may legitimately keep a corrupt-but-plausible token (see
+faults.py docstring) -- that boundary is deliberately not asserted here.
+
+The hypothesis stateful machine at the bottom drives a fault-enabled
+engine through random admit/step interleavings with the pool invariants
+as a machine invariant; a seeded fallback walk covers the same ground
+when hypothesis is not installed.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.models import api
+from repro.serving import (ArenaAllocFault, EngineConfig, FaultConfig,
+                           FaultInjector, LampEngine, PagedKVPool,
+                           QueueFullError, SamplingParams, fault_hash)
+from repro.serving.faults import FAULT_SITES
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ================================================================= injector
+
+def test_fault_hash_deterministic_and_site_separated():
+    for site in FAULT_SITES:
+        assert fault_hash(3, site) == fault_hash(3, site)
+        assert fault_hash(3, site, salt=1) != fault_hash(3, site, salt=2)
+    # different sites at the same step draw independent coins
+    draws = {site: fault_hash(11, site) for site in FAULT_SITES}
+    assert len(set(draws.values())) == len(FAULT_SITES)
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(nan_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(alloc_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultConfig(stall_steps=0)
+    assert not FaultConfig().any_rate
+    assert FaultConfig(nan_rate=0.5).any_rate
+
+
+def test_injector_fires_deterministically():
+    a = FaultInjector(FaultConfig(enabled=True, nan_rate=0.3, salt=5))
+    b = FaultInjector(FaultConfig(enabled=True, nan_rate=0.3, salt=5))
+    seq_a = [a.fires(s, "nan") for s in range(200)]
+    seq_b = [b.fires(s, "nan") for s in range(200)]
+    assert seq_a == seq_b
+    assert 0 < sum(seq_a) < 200          # rate 0.3 is neither never nor always
+    zero = FaultInjector(FaultConfig(enabled=True, salt=5))
+    assert not any(zero.fires(s, "nan") for s in range(200))
+
+
+def test_injector_budget_and_latch():
+    inj = FaultInjector(FaultConfig(enabled=True, nan_rate=1.0, max_faults=2))
+    fired = 0
+    for s in range(10):
+        if inj.fires(s, "nan"):
+            inj.record(s, "nan")
+            fired += 1
+            # one-per-(site, step) latch: recording consumes this step
+            assert not inj.fires(s, "nan")
+    assert fired == 2                    # budget caps total injections
+    assert inj.stats()["injected"] == 2
+
+
+def test_pick_row_deterministic():
+    inj = FaultInjector(FaultConfig(enabled=True, nan_rate=1.0))
+    reqs = [4, 9, 17]
+    assert inj.pick_row(7, "nan", reqs) == inj.pick_row(7, "nan", reqs)
+    assert inj.pick_row(7, "nan", []) is None
+    picks = {inj.pick_row(s, "nan", reqs) for s in range(50)}
+    assert picks == {0, 1, 2}            # the min-hash spreads over rows
+
+
+# ================================================================= kv pool
+
+def _pool(model, n_blocks=8, block_size=4):
+    return PagedKVPool(model[0], n_blocks=n_blocks, block_size=block_size)
+
+
+def test_arm_alloc_failure_raises_once(model):
+    pool = _pool(model)
+    pool.arm_alloc_failure()
+    with pytest.raises(ArenaAllocFault):
+        pool.alloc(1)
+    blocks = pool.alloc(2)               # one-shot: the next alloc succeeds
+    assert len(blocks) == 2
+    pool.check_invariants()
+
+
+def test_check_invariants_detects_corruption(model):
+    pool = _pool(model)
+    blocks = pool.alloc(3)
+    pool.check_invariants()
+    pool.refcount[blocks[0]] = 0         # corrupt: owned block with rc 0
+    with pytest.raises(RuntimeError, match="invariant"):
+        pool.check_invariants()
+    pool.refcount[blocks[0]] = 1
+    pool.check_invariants()
+    pool._free.append(blocks[1])         # corrupt: block both owned and free
+    pool._free_set.add(blocks[1])
+    with pytest.raises(RuntimeError, match="invariant"):
+        pool.check_invariants()
+
+
+# ================================================================== engine
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduce_cfg(get_config("gpt2")).replace(vocab=128)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(seed, n=6, temperature=0.0):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, 128, size=int(rng.integers(3, 20))).tolist(),
+             SamplingParams(max_new_tokens=int(rng.integers(2, 8)), seed=i,
+                            temperature=temperature))
+            for i in range(n)]
+
+
+def _run(cfg, params, reqs, clock=None, **ekw):
+    kw = dict(block_size=4, max_model_len=64, max_prefill_tokens=64,
+              max_prefill_batch=4, max_decode_batch=8, paranoid=True)
+    kw.update(ekw)
+    engine = LampEngine(cfg, params, EngineConfig(**kw), clock=clock)
+    for prompt, sampling in reqs:
+        engine.add_request(prompt, sampling)
+    outs = engine.run_to_completion()
+    engine.pool.check_invariants(engine._seqs.values())
+    return engine, {o.req_id: o for o in outs}
+
+
+def _assert_absorbed(base, chaos):
+    """Every chaos request finished; non-failed ones token-identical."""
+    assert set(chaos) == set(base)
+    for rid, o in chaos.items():
+        assert o.finish_reason is not None
+        if o.error is None:
+            assert o.tokens == base[rid].tokens, rid
+        else:
+            assert o.finish_reason in ("unhealthy", "timeout", "stalled")
+
+
+@pytest.mark.parametrize("temperature,kernel", [
+    (0.0, "gather"), (0.8, "gather"), (0.0, "pallas")])
+def test_chaos_differential_plain(model, temperature, kernel):
+    """NaN + alloc + stall faults on the plain engine, both kernels: zero
+    crashes, every request recovered token-identically (rung-0 retry
+    replays the keyed sampling stream, so this holds for sampled runs
+    too)."""
+    cfg, params = model
+    reqs = _requests(4, temperature=temperature)
+    _, base = _run(cfg, params, reqs, kernel=kernel)
+    fc = FaultConfig(enabled=True, salt=7, nan_rate=0.25, alloc_rate=0.15,
+                     stall_rate=0.05, stall_steps=2, stall_s=0.0)
+    eng, chaos = _run(cfg, params, reqs, kernel=kernel, faults=fc,
+                      stall_patience=8)
+    _assert_absorbed(base, chaos)
+    s = eng.stats()
+    assert s["faults"]["injected"] > 0
+    assert s["failed_requests"] == sum(
+        1 for o in chaos.values() if o.error is not None)
+
+
+def test_chaos_differential_spec_fused(model):
+    """All five sites against the fused speculative step (greedy): draft
+    corruption is rejected by the verifier, the injected fused-step fault
+    degrades to the split twin, NaN rows recover through the ladder."""
+    cfg, params = model
+    reqs = _requests(11)
+    _, base = _run(cfg, params, reqs, speculative=True, draft_len=3)
+    fc = FaultConfig(enabled=True, salt=3, nan_rate=0.3, draft_rate=0.3,
+                     step_rate=0.2, alloc_rate=0.1, stall_rate=0.05,
+                     stall_steps=2, stall_s=0.0)
+    eng, chaos = _run(cfg, params, reqs, speculative=True, draft_len=3,
+                      faults=fc, stall_patience=8)
+    _assert_absorbed(base, chaos)
+    assert eng.stats()["faults"]["injected"] > 0
+
+
+def test_chaos_replays_bit_for_bit(model):
+    cfg, params = model
+    reqs = _requests(4)
+    fc = FaultConfig(enabled=True, salt=9, nan_rate=0.3, alloc_rate=0.2)
+    e1, r1 = _run(cfg, params, reqs, faults=fc)
+    e2, r2 = _run(cfg, params, reqs, faults=fc)
+    assert {k: o.tokens for k, o in r1.items()} == \
+        {k: o.tokens for k, o in r2.items()}
+    assert e1.stats()["faults"] == e2.stats()["faults"]
+    assert e1.stats()["recoveries"] == e2.stats()["recoveries"]
+
+
+def test_guard_off_survives_nan(model):
+    """With the health guard off, injected NaN propagates like a real
+    kernel fault -- the engine must still complete every request (garbage
+    tokens, no crash), which is exactly why the guard defaults on."""
+    cfg, params = model
+    reqs = _requests(4)
+    fc = FaultConfig(enabled=True, salt=7, nan_rate=0.5, max_faults=2)
+    eng, outs = _run(cfg, params, reqs, faults=fc, health_guard=False)
+    assert len(outs) == len(reqs)
+    assert all(o.error is None for o in outs.values())
+    assert eng.stats()["faults"]["by_site"]["nan"] == 2
+
+
+def test_ladder_exhaustion_fails_request_alone(model):
+    """An impossible health bound exhausts every recovery rung: each
+    request fails individually with a diagnostic error naming the rungs
+    tried; the engine itself completes and the pool stays consistent."""
+    cfg, params = model
+    reqs = _requests(4, n=3)
+    eng, outs = _run(cfg, params, reqs, health_max_abs=1e-9, max_retries=2)
+    assert len(outs) == len(reqs)
+    for o in outs.values():
+        assert o.finish_reason == "unhealthy"
+        assert "recovery rung" in o.error
+    s = eng.stats()
+    assert s["failed_requests"] == len(reqs)
+    assert not eng.has_unfinished()
+
+
+def test_deadline_expires_request(model):
+    cfg, params = model
+    clk = FakeClock(1000.0)
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=4, max_model_len=64, paranoid=True), clock=clk)
+    engine.add_request(list(range(8)),
+                       SamplingParams(max_new_tokens=32, deadline_s=5.0))
+    engine.add_request(list(range(8, 16)),
+                       SamplingParams(max_new_tokens=4))
+    engine.step()                        # both admitted and prefilled
+    clk.advance(10.0)                    # past the first request's TTL
+    outs = []
+    while engine.has_unfinished():
+        outs.extend(engine.step())
+    by_id = {o.req_id: o for o in outs}
+    assert by_id[0].finish_reason == "timeout"
+    assert "deadline_s=5.0" in by_id[0].error
+    assert by_id[1].finish_reason == "length" and by_id[1].error is None
+    engine.pool.check_invariants(engine._seqs.values())
+    assert engine.stats()["failed_requests"] == 1
+
+
+def test_queue_full_rejects_admission(model):
+    cfg, params = model
+    engine = LampEngine(cfg, params, EngineConfig(
+        block_size=4, max_model_len=64, max_queue=2))
+    engine.add_request(list(range(6)), SamplingParams(max_new_tokens=2))
+    engine.add_request(list(range(6)), SamplingParams(max_new_tokens=2))
+    with pytest.raises(QueueFullError):
+        engine.add_request(list(range(6)), SamplingParams(max_new_tokens=2))
+    outs = engine.run_to_completion()
+    assert len(outs) == 2 and all(o.error is None for o in outs)
+
+
+def test_watchdog_clears_long_stall(model):
+    """A stall longer than the watchdog's patience: run_to_completion must
+    clear it (recovery, not the hang raise) and finish identically."""
+    cfg, params = model
+    reqs = _requests(4, n=3)
+    _, base = _run(cfg, params, reqs)
+    fc = FaultConfig(enabled=True, salt=1, stall_rate=1.0, max_faults=1,
+                     stall_steps=500, stall_s=0.0)
+    eng, outs = _run(cfg, params, reqs, faults=fc, stall_patience=4)
+    _assert_absorbed(base, outs)
+    assert all(o.error is None for o in outs.values())
+    s = eng.stats()
+    assert s["faults"]["by_site"]["stall"] == 1
+    assert s["recoveries"] >= 1          # includes the stall_clear action
+
+
+def test_alloc_faults_degrade_not_crash(model):
+    cfg, params = model
+    reqs = _requests(4)
+    _, base = _run(cfg, params, reqs)
+    fc = FaultConfig(enabled=True, salt=2, alloc_rate=1.0, max_faults=3)
+    eng, chaos = _run(cfg, params, reqs, faults=fc, stall_patience=16)
+    _assert_absorbed(base, chaos)
+    assert all(o.error is None for o in chaos.values())
+    assert eng.stats()["faults"]["by_site"]["alloc"] == 3
+
+
+# ===================================================== randomized walks
+
+def _chaos_engine(cfg, params, salt):
+    fc = FaultConfig(enabled=True, salt=salt, nan_rate=0.2, alloc_rate=0.1,
+                     draft_rate=0.2, step_rate=0.1, stall_rate=0.05,
+                     stall_steps=2, stall_s=0.0)
+    return LampEngine(cfg, params, EngineConfig(
+        block_size=4, max_model_len=64, max_prefill_tokens=32,
+        max_prefill_batch=4, max_decode_batch=8, speculative=True,
+        draft_len=2, max_queue=8, paranoid=True, faults=fc,
+        stall_patience=8))
+
+
+def test_chaos_walk_seeded(model):
+    """Seeded fallback walk (runs without hypothesis): random interleaving
+    of admissions and steps over a fault-enabled engine; the pool must stay
+    consistent throughout and every request must finish or fail alone."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    eng = _chaos_engine(cfg, params, salt=13)
+    outs, admitted = [], 0
+    for _ in range(60):
+        if admitted < 10 and rng.random() < 0.4:
+            plen = int(rng.integers(3, 16))
+            try:
+                eng.add_request(rng.integers(0, 128, size=plen).tolist(),
+                                SamplingParams(
+                                    max_new_tokens=int(rng.integers(2, 6)),
+                                    seed=admitted))
+                admitted += 1
+            except QueueFullError:
+                pass
+        outs.extend(eng.step())
+    outs.extend(eng.run_to_completion())
+    assert len(outs) == admitted
+    for o in outs:
+        assert o.finish_reason is not None
+    eng.pool.check_invariants(eng._seqs.values())
+
+
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    class EngineChaosMachine(RuleBasedStateMachine):
+        """Random admit/step interleavings over a fault-enabled engine
+        (all five sites active). The machine asserts the absorb contract
+        after every rule: no crash escapes, the pool invariants hold, and
+        teardown drains the engine to a finish-or-fail for every request.
+        Kept deliberately small: each step is a jitted launch."""
+        cfg = None
+        params = None
+
+        @initialize(salt=st.integers(0, 7))
+        def setup(self, salt):
+            self.eng = _chaos_engine(type(self).cfg, type(self).params,
+                                     salt=salt)
+            self.admitted = 0
+            self.finished = 0
+
+        @rule(plen=st.integers(3, 14), new=st.integers(2, 5))
+        def admit(self, plen, new):
+            if self.admitted >= 8:
+                return
+            try:
+                self.eng.add_request(
+                    [(plen * 7 + i) % 128 for i in range(plen)],
+                    SamplingParams(max_new_tokens=new, seed=self.admitted))
+                self.admitted += 1
+            except QueueFullError:
+                pass
+
+        @rule(n=st.integers(1, 4))
+        def step(self, n):
+            for _ in range(n):
+                self.finished += len(self.eng.step())
+
+        @invariant()
+        def pool_consistent(self):
+            if hasattr(self, "eng"):
+                self.eng.pool.check_invariants(self.eng._seqs.values())
+
+        def teardown(self):
+            if hasattr(self, "eng"):
+                outs = self.eng.run_to_completion()
+                assert self.finished + len(outs) == self.admitted
+                assert all(o.finish_reason is not None for o in outs)
+                self.eng.pool.check_invariants(self.eng._seqs.values())
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_engine_chaos_machine(model):
+    cfg, params = model
+    EngineChaosMachine.cfg = cfg
+    EngineChaosMachine.params = params
+    # explicit small settings override the ci/dev profiles: every machine
+    # step is a real jitted engine step, so the deep-fuzz budget lives in
+    # the seeded walk above and the chaos differential tests, not here
+    hypothesis.stateful.run_state_machine_as_test(
+        EngineChaosMachine,
+        settings=hypothesis.settings(max_examples=5, stateful_step_count=12,
+                                     deadline=None, derandomize=True))

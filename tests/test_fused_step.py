@@ -173,7 +173,8 @@ def test_stats_keys_pinned_and_role_derived_views(model):
         "compiles", "compile_time_s", "phase", "live_requests",
         "spec_rounds", "spec_drafted_tokens", "spec_accepted_tokens",
         "spec_acceptance_rate", "spec_tokens_per_round",
-        "verify_recompute_rate", "policy",
+        "verify_recompute_rate", "policy", "audit",
+        "recoveries", "failed_requests", "faults",
     }
     assert set(s) == expected
     # every step was mixed, yet the legacy views stay populated by role

@@ -118,42 +118,9 @@ class PoolHarness:
     # -- invariants ---------------------------------------------------------
 
     def check(self):
-        pool = self.pool
-        free = set(pool._free)
-        cached_free = set(pool._cached_free)
-        owned = set(pool.refcount)
-        # block conservation: free + unique owned == total, disjointly
-        assert free == pool._free_set
-        assert not (free & cached_free), "block both free and cached-free"
-        assert not (free & owned), "block both free and owned"
-        assert not (cached_free & owned), "block both cached-free and owned"
-        assert free | cached_free | owned == set(range(1, pool.n_blocks))
-        assert pool.num_free == len(free) + len(cached_free)
-        assert pool.num_free + len(owned) == pool.num_total
-        # refcount == number of owning sequences, per block
-        counts = {}
-        for seq in self.seqs.values():
-            for b in set(seq.block_ids):
-                counts[b] = counts.get(b, 0) + 1
-        assert counts == pool.refcount
-        # every block table points at live (non-free) arena rows
-        for seq in self.seqs.values():
-            assert len(set(seq.block_ids)) == len(seq.block_ids), \
-                "duplicate block in one table"
-            for b in seq.block_ids:
-                assert 0 < b < pool.n_blocks
-                assert b not in free and b not in cached_free
-            # the block a decode write would land in must be private
-            tail = seq.cache_len // pool.block_size
-            if seq.cache_len % pool.block_size and tail < len(seq.block_ids):
-                assert not pool.needs_cow(seq.block_ids[tail])
-        # prefix index is a bijection over non-free blocks, with the
-        # content-verification chunk stored for every entry
-        assert len(pool._hash_to_block) == len(pool._block_to_hash)
-        assert set(pool._hash_to_chunk) == set(pool._hash_to_block)
-        for h, b in pool._hash_to_block.items():
-            assert pool._block_to_hash[b] == h
-            assert b not in free
+        # the full oracle now lives on the pool itself (production recovery
+        # paths run it too); the harness just feeds it every live owner
+        self.pool.check_invariants(self.seqs.values())
 
 
 def _random_tokens(rng, vocab, block_size):
@@ -630,11 +597,14 @@ def test_decode_interleaves_mid_prefill(model):
     while engine.has_unfinished():
         pre, dec = engine.prefill_steps, engine.decode_steps
         engine.step()
-        kinds.append("p" if engine.prefill_steps > pre else "d")
+        p = engine.prefill_steps > pre
+        d = engine.decode_steps > dec
+        kinds.append("b" if p and d else "p" if p else "d")
     trace = "".join(kinds)
-    # B needs 6 chunks of 4; decode steps must appear between them
-    assert trace.count("p") >= 6
-    assert "pd" in trace and "dp" in trace, trace
+    # B needs 6 chunks of 4; A must decode between (split phases) or
+    # within (fused mixed step, "b") those chunks
+    assert trace.count("p") + trace.count("b") >= 6
+    assert "b" in trace or ("pd" in trace and "dp" in trace), trace
     assert engine.prefill_chunks >= 5
     outs = {o.req_id: o for o in engine._finished}
     assert len(outs[a].tokens) == 12 and len(outs[b].tokens) == 4
